@@ -1,0 +1,66 @@
+"""Shared benchmark substrate: paper-like synthetic datasets + timing.
+
+The paper's testbeds (Table 2) are Wikipedia (n=5.9M, GloVe-25d, transversal
+matroid over 100 LDA topics, metric cosine distance) and Songs (n=238k,
+sparse bags-of-words, partition matroid over 16 genres). This container has
+no network and one CPU core, so we reproduce the *structure* at reduced n
+(documented per benchmark) with matched dimensionality/matroid shape:
+
+  wikipedia_like(n): 25-d vectors with low intrinsic dimension, 100 topics,
+                     gamma<=3 topics/page (transversal, rank 100)
+  songs_like(n):     100-d sparse-ish vectors, 16 genres with skewed sizes,
+                     per-genre caps proportional to frequency (partition,
+                     rank 89-ish)
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.matroid import MatroidSpec
+
+
+def wikipedia_like(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    h, gamma = 100, 3
+    # low doubling dimension: points near a 4-d manifold in 25-d
+    basis = rng.normal(size=(4, 25))
+    topic_centers = rng.normal(size=(h, 4))
+    topic_of = rng.integers(0, h, n)
+    P = topic_centers[topic_of] @ basis + 0.6 * rng.normal(size=(n, 25))
+    cats = np.full((n, gamma), -1, np.int32)
+    cats[:, 0] = topic_of
+    extra1 = rng.random(n) < 0.4
+    cats[extra1, 1] = rng.integers(0, h, extra1.sum())
+    extra2 = rng.random(n) < 0.1
+    cats[extra2, 2] = rng.integers(0, h, extra2.sum())
+    spec = MatroidSpec("transversal", num_categories=h, gamma=gamma)
+    return P.astype(np.float32), cats, None, spec
+
+
+def songs_like(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed + 1)
+    h = 16
+    sizes = rng.dirichlet(np.ones(h) * 0.5)
+    genre = rng.choice(h, n, p=sizes)
+    basis = rng.normal(size=(5, 100))
+    centers = rng.normal(size=(h, 5)) * 2
+    P = centers[genre] @ basis + 1.2 * rng.normal(size=(n, 100))
+    counts = np.bincount(genre, minlength=h)
+    caps = np.maximum(1, (counts / counts.sum() * 89)).astype(np.int32)
+    spec = MatroidSpec("partition", num_categories=h, gamma=1)
+    return P.astype(np.float32), genre[:, None].astype(np.int32), caps, spec
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+
+
+def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,48 @@
+"""Paper Fig. 2: StreamCoreset — coreset size (tau) vs quality vs time,
+single pass over the full dataset.
+
+Paper scale: full Wikipedia/Songs, tau in {8..256}. Container scale:
+n=20000, tau in {8,16,32,64,128}.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import solve_dmmc
+
+from .common import Timer, csv_line, songs_like, wikipedia_like
+
+
+def run(n=20000, k=16, quick=False):
+    rows = []
+    taus = (8, 32) if quick else (8, 16, 32, 64, 128)
+    for name, (P, cats, caps, spec) in [
+        ("songs", songs_like(n)), ("wikipedia", wikipedia_like(n)),
+    ]:
+        for tau in taus:
+            with Timer() as t:
+                sol = solve_dmmc(P, k, spec, cats=cats, caps=caps, tau=tau,
+                                 setting="streaming", metric="cosine")
+            rows.append(dict(dataset=name, tau=tau, time_s=t.s,
+                             diversity=sol.diversity,
+                             coreset=sol.coreset_size))
+    return rows
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    best = {}
+    for r in rows:
+        best[r["dataset"]] = max(best.get(r["dataset"], 0), r["diversity"])
+    return [
+        csv_line(
+            f"fig2_{r['dataset']}/tau={r['tau']}", r["time_s"] * 1e6,
+            f"diversity_ratio={r['diversity']/best[r['dataset']]:.4f};"
+            f"coreset={r['coreset']}",
+        )
+        for r in rows
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

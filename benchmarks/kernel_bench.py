@@ -1,0 +1,62 @@
+"""Kernel microbench: us_per_call for the GMM/pdist/SSD hot paths.
+
+On this CPU container the numbers time the jnp reference path (the Pallas
+kernels target TPU and run here only under interpret=True, which measures
+python, not hardware). Interpret-mode correctness is covered by tests.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .common import csv_line
+
+
+def _time(f, *args, reps=5):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(quick=False):
+    rng = np.random.default_rng(0)
+    out = []
+    n, m, d = (20000, 256, 25) if not quick else (2000, 64, 25)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    us = _time(lambda a, b: ops.pairwise_sqdist(a, b, force="ref"), x, y)
+    flops = 2 * n * m * d
+    out.append(csv_line("kernel_pdist_ref", us,
+                        f"gflops={flops/us/1e3:.2f}"))
+    md = jnp.full((n,), 1e9, jnp.float32)
+    v = jnp.ones((n,), bool)
+    us = _time(
+        lambda a, z, c, w: ops.gmm_update(a, z, c, w, force="ref"),
+        x, y[0], md, v,
+    )
+    out.append(csv_line("kernel_gmm_update_ref", us,
+                        f"bytes_per_s={(n*d*4+n*8)/us*1e6/1e9:.2f}GB"))
+    g, q, p, nn = (64, 128, 64, 64) if not quick else (8, 32, 16, 16)
+    xb = jnp.asarray(rng.normal(size=(g, q, p)), jnp.float32)
+    la = jnp.asarray(-rng.uniform(0.01, 0.3, size=(g, q)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(g, q, nn)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(g, q, nn)), jnp.float32)
+    us = _time(
+        lambda *a: ops.ssd_intra_chunk(*a, force="ref"), xb, la, B, C
+    )
+    fl = g * (2 * q * q * nn + 2 * q * q * p + 2 * q * nn * p)
+    out.append(csv_line("kernel_ssd_intra_ref", us,
+                        f"gflops={fl/us/1e3:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

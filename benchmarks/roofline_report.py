@@ -1,0 +1,56 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the per-cell JSON
+records produced by launch/dryrun.py."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir="experiments/dryrun", tag="base"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*__{tag}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_table(recs, mesh="single"):
+    rows = []
+    head = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "bound s | MODEL/HLO | peak GiB |"
+    )
+    sep = "|" + "---|" * 9
+    rows.append(head)
+    rows.append(sep)
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("skipped"):
+            continue
+        t = r["terms_s"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4g} | "
+            f"{t['memory_s']:.4g} | {t['collective_s']:.4g} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{r['roofline_bound_s']:.4g} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{r['memory']['peak_estimate_gib']:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def main(quick=False):
+    recs = load()
+    lines = []
+    for mesh in ("single", "multi"):
+        n = sum(1 for r in recs if r.get("mesh") == mesh and not r.get("skipped"))
+        lines.append(f"roofline_cells_{mesh},{n},")
+    return lines
+
+
+if __name__ == "__main__":
+    recs = load()
+    print("## single-pod (16x16 = 256 chips)\n")
+    print(fmt_table(recs, "single"))
+    print("\n## multi-pod (2x16x16 = 512 chips)\n")
+    print(fmt_table(recs, "multi"))

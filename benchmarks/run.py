@@ -1,0 +1,57 @@
+"""Benchmark harness: one entry per paper table/figure + kernel microbench.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV (paper analogues documented in each
+module; DESIGN.md §9 maps benchmarks -> paper figures).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from . import (
+        coreset_sizes,
+        fig1_seq_vs_amt,
+        fig2_streaming,
+        fig3_mapreduce,
+        kernel_bench,
+        roofline_report,
+        variants_quality,
+    )
+
+    suites = [
+        ("kernels", kernel_bench.main),
+        ("variants", variants_quality.main),
+        ("coreset_sizes", coreset_sizes.main),
+        ("fig1", fig1_seq_vs_amt.main),
+        ("fig2", fig2_streaming.main),
+        ("fig3", fig3_mapreduce.main),
+        ("roofline", roofline_report.main),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites:
+        if args.only and args.only != name:
+            continue
+        try:
+            for line in fn(quick=args.quick):
+                print(line, flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""(1-eps) guarantee across all five Table-1 objectives: coreset-restricted
+exhaustive optimum vs full-input exhaustive optimum on small instances —
+the paper's §4.4 'first feasible algorithms' claim, validated exactly."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import make_host_matroid
+from repro.core.coreset import seq_coreset_host
+from repro.core.diversity import VARIANTS
+from repro.core.exhaustive import exhaustive_best
+from repro.core.geometry import dists
+from repro.core.matroid import MatroidSpec
+
+from .common import Timer, csv_line
+
+
+def run(n=60, k=4, eps=0.5, seed=0):
+    rng = np.random.default_rng(seed)
+    h = 3
+    # tightly clustered (low doubling dimension) so the radius-target GMM
+    # stops with a coreset << n — the regime the paper targets
+    centers = rng.normal(size=(6, 6)) * 3.0
+    asg = rng.integers(0, 6, n)
+    P = (centers[asg] + 0.01 * rng.normal(size=(n, 6))).astype(np.float32)
+    cats = rng.integers(0, h, (n, 1)).astype(np.int32)
+    caps = np.full(h, 2, np.int32)
+    spec = MatroidSpec("partition", num_categories=h, gamma=1)
+    matroid = make_host_matroid(spec, cats, caps, n, k)
+    D = np.asarray(dists(jnp.asarray(P), jnp.asarray(P)))
+    sel, info = seq_coreset_host(P, cats, spec, caps, k, eps=eps)
+    rows = []
+    for v in VARIANTS:
+        with Timer() as t:
+            _, opt, c1 = exhaustive_best(D, matroid, k, range(n), v)
+            _, got, c2 = exhaustive_best(D, matroid, k, sel, v)
+        assert c1 and c2
+        rows.append(dict(variant=v, ratio=got / opt, time_s=t.s,
+                         coreset=len(sel), eps=eps))
+    return rows
+
+
+def main(quick=False):
+    return [
+        csv_line(
+            f"variant_{r['variant']}", r["time_s"] * 1e6,
+            f"ratio={r['ratio']:.4f};guarantee={1-r['eps']:.2f};"
+            f"coreset={r['coreset']}",
+        )
+        for r in run(n=40 if quick else 60)
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

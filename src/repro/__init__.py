@@ -1,0 +1,3 @@
+"""repro: coreset-based diversity maximization under matroid constraints
+(Ceccarello, Pietracaprina, Pucci — 2020) as a multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,26 @@
+"""The paper's own experimental configuration (Section 5): defaults for
+the DMMC pipeline — Wikipedia-like (transversal, GloVe-25d) and
+Songs-like (partition, sparse-5000d) workloads."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DMMCConfig:
+    name: str
+    n: int
+    dim: int
+    matroid: str  # partition | transversal
+    num_categories: int
+    gamma: int
+    rank: int
+    metric: str = "cosine"
+
+
+WIKIPEDIA = DMMCConfig(
+    name="wikipedia-sim", n=5_886_692, dim=25, matroid="transversal",
+    num_categories=100, gamma=3, rank=100,
+)
+SONGS = DMMCConfig(
+    name="songs-sim", n=237_698, dim=5000, matroid="partition",
+    num_categories=16, gamma=1, rank=89,
+)

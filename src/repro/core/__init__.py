@@ -1,0 +1,42 @@
+"""Core library: the paper's contribution (coreset-based DMMC) in JAX.
+
+Public API:
+    MatroidSpec, make_host_matroid          -- matroid representations
+    gmm, gmm_fixed, gmm_radius              -- Gonzalez clustering (Alg. 1 engine)
+    seq_coreset, seq_coreset_host           -- sequential construction (Alg. 1)
+    stream_coreset, stream_coreset_host     -- streaming construction (Alg. 2)
+    mapreduce_coreset                       -- shard_map MR construction (4.2)
+    local_search_sum, exhaustive_best       -- final-stage solvers (4.4)
+    solve_dmmc                              -- end-to-end driver
+    diversity, jnp_diversity, VARIANTS      -- Table-1 objectives
+"""
+from .diversity import VARIANTS, Variant, diversity, f_of_k, farness_lower_bound, jnp_diversity
+from .exhaustive import exhaustive_best
+from .gmm import GMMResult, gmm, gmm_fixed, gmm_radius
+from .coreset import Coreset, concat_coresets, seq_coreset, seq_coreset_host
+from .local_search import greedy_init, local_search_sum
+from .mapreduce import mapreduce_coreset
+from .matroid import (
+    GeneralMatroid,
+    Matroid,
+    MatroidSpec,
+    PartitionMatroid,
+    TransversalMatroid,
+    UniformMatroid,
+    make_host_matroid,
+)
+from .distributed_gmm import distributed_coreset
+from .solve import DMMCSolution, solve_dmmc
+from .streaming import stream_coreset, stream_coreset_host
+
+__all__ = [
+    "VARIANTS", "Variant", "diversity", "f_of_k", "farness_lower_bound",
+    "jnp_diversity", "exhaustive_best", "GMMResult", "gmm", "gmm_fixed",
+    "gmm_radius", "Coreset", "concat_coresets", "seq_coreset",
+    "seq_coreset_host", "greedy_init", "local_search_sum",
+    "mapreduce_coreset", "GeneralMatroid", "Matroid", "MatroidSpec",
+    "PartitionMatroid", "TransversalMatroid", "UniformMatroid",
+    "make_host_matroid", "DMMCSolution", "solve_dmmc", "stream_coreset",
+    "distributed_coreset",
+    "stream_coreset_host",
+]

@@ -1,0 +1,75 @@
+"""Distance primitives for the DMMC framework.
+
+All pairwise work is phrased as ``||x||^2 + ||y||^2 - 2 x.y`` so the dominant
+cost is an MXU-friendly matmul (see kernels/pdist.py for the tiled TPU
+version; these jnp forms are the reference / CPU path that ``kernels.ops``
+dispatches to off-TPU).
+
+Supported metrics
+-----------------
+``sqeuclidean``  squared Euclidean (NOT a metric; internal use only — GMM and
+                 the coreset radius logic always compare true distances).
+``euclidean``    L2 distance.
+``cosine``       the *metric* version of cosine distance used by the paper
+                 [Leskovec et al.]: we L2-normalize inputs once and use the
+                 Euclidean distance on the sphere, which is a metric inducing
+                 the same ordering as angular distance.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Metric = Literal["euclidean", "cosine", "sqeuclidean"]
+
+_EPS = 1e-12
+
+
+def normalize_for_metric(x: jnp.ndarray, metric: Metric) -> jnp.ndarray:
+    """Preprocess points so downstream code can use plain L2 geometry."""
+    if metric == "cosine":
+        n = jnp.sqrt(jnp.maximum(jnp.sum(x * x, axis=-1, keepdims=True), _EPS))
+        return x / n
+    return x
+
+
+def sq_dists(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise squared Euclidean distances. x: (n, d), y: (m, d) -> (n, m)."""
+    xn = jnp.sum(x * x, axis=-1)
+    yn = jnp.sum(y * y, axis=-1)
+    d2 = xn[:, None] + yn[None, :] - 2.0 * (x @ y.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def dists(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise Euclidean distances (n, m)."""
+    return jnp.sqrt(sq_dists(x, y))
+
+
+def point_dists(x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Distances of every row of x (n, d) to a single point z (d,) -> (n,)."""
+    diff = x - z[None, :]
+    return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+
+
+def pairwise_matrix(x: jnp.ndarray) -> jnp.ndarray:
+    """Full symmetric distance matrix of a point set (k, d) -> (k, k)."""
+    d = dists(x, x)
+    # exact zeros on the diagonal despite float error
+    return d * (1.0 - jnp.eye(x.shape[0], dtype=d.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def diameter_lower_bound(x: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """2-approximate diameter: delta = max_j d(x_0, x_j) in [Delta/2, Delta].
+
+    This is the paper's ``delta = d(z1, z2)`` quantity (Alg. 1): the distance
+    from an arbitrary anchor to the farthest point.
+    """
+    big_neg = jnp.asarray(-jnp.inf, x.dtype)
+    d0 = point_dists(x, x[0])
+    d0 = jnp.where(valid, d0, big_neg)
+    return jnp.max(d0)

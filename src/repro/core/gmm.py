@@ -1,0 +1,113 @@
+"""Gonzalez farthest-first traversal (GMM) — the paper's clustering engine.
+
+Two stopping rules, both from the paper:
+
+* **radius-target** (Alg. 1): iterate until the clustering radius drops to
+  ``eps * delta / (16 k)`` where ``delta = d(z1, z2) in [Delta/2, Delta]`` —
+  this is what makes the construction oblivious to the doubling dimension;
+* **fixed tau** (the experiments' knob): run exactly ``tau`` iterations.
+
+The inner loop is one fused pass over the point matrix per added center
+(``kernels.ops.gmm_update``): distance-to-new-center, running min, and the
+arg-max that selects the next center, all in one HBM read. Total work is
+O(n tau) distances — Thm 5.
+
+Everything is static-shape and jit-able, so the MapReduce construction can
+run it *inside* shard_map on each shard.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from . import geometry
+
+
+class GMMResult(NamedTuple):
+    centers: jnp.ndarray  # int32[tau_max] point indices, -1 padded
+    num_centers: jnp.ndarray  # int32 scalar
+    assign: jnp.ndarray  # int32[n] cluster id (position in `centers`)
+    min_dist: jnp.ndarray  # f32[n] distance to own center
+    radius: jnp.ndarray  # f32 scalar (over valid points)
+    delta: jnp.ndarray  # f32 scalar, d(z1, z2) in [Delta/2, Delta]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tau_max", "k", "use_radius_target")
+)
+def gmm(
+    points: jnp.ndarray,  # (n, d), already metric-normalized
+    valid: jnp.ndarray,  # (n,) bool
+    tau_max: int,
+    *,
+    k: int = 1,
+    eps: float = 0.0,
+    use_radius_target: bool = False,
+) -> GMMResult:
+    """Farthest-first traversal with masked (padded) inputs.
+
+    With ``use_radius_target``: stop at radius <= eps * delta / (16 k)
+    (Alg. 1 line: ``while r(C, Z) > eps*delta/(16k)``), capped at tau_max.
+    Otherwise: run to exactly min(tau_max, #valid) centers.
+    """
+    n = points.shape[0]
+    has_any = jnp.any(valid)
+    anchor = jnp.argmax(valid).astype(jnp.int32)  # first valid point (z1)
+
+    nm0, far0, delta = ops.gmm_update(
+        points,
+        points[anchor],
+        jnp.full((n,), jnp.inf, jnp.float32),
+        valid,
+    )
+    # state: (t, centers, assign, min_dist, next_idx, radius)
+    centers0 = jnp.full((tau_max,), -1, jnp.int32).at[0].set(anchor)
+    assign0 = jnp.zeros((n,), jnp.int32)
+    target = (
+        jnp.asarray(eps, jnp.float32) * delta / (16.0 * k)
+        if use_radius_target
+        else jnp.asarray(-1.0, jnp.float32)
+    )
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+
+    def cond(state):
+        t, _, _, _, _, radius = state
+        return (t < jnp.minimum(tau_max, n_valid)) & (radius > target)
+
+    def body(state):
+        t, centers, assign, min_dist, nxt, _ = state
+        centers = centers.at[t].set(nxt)
+        new_min, far_idx, far_val = ops.gmm_update(
+            points, points[nxt], min_dist, valid
+        )
+        assign = jnp.where(new_min < min_dist, t, assign)
+        return (t + 1, centers, assign, new_min, far_idx, far_val)
+
+    t, centers, assign, min_dist, _, radius = jax.lax.while_loop(
+        cond, body, (jnp.int32(1), centers0, assign0, nm0, far0, delta)
+    )
+    radius = jnp.where(has_any, jnp.maximum(radius, 0.0), 0.0)
+    return GMMResult(
+        centers=centers,
+        num_centers=jnp.where(has_any, t, 0).astype(jnp.int32),
+        assign=assign,
+        min_dist=min_dist,
+        radius=radius,
+        delta=jnp.where(has_any, delta, 0.0),
+    )
+
+
+def gmm_fixed(points, valid, tau: int) -> GMMResult:
+    """Experiments' knob: exactly tau clusters (Section 5 parameterization)."""
+    return gmm(points, valid, tau_max=tau)
+
+
+def gmm_radius(points, valid, k: int, eps: float, tau_max: int) -> GMMResult:
+    """Alg. 1 stopping rule: radius <= eps*delta/(16k), capped at tau_max."""
+    return gmm(
+        points, valid, tau_max=tau_max, k=k, eps=eps, use_radius_target=True
+    )

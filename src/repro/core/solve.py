@@ -1,0 +1,175 @@
+"""End-to-end DMMC driver: coreset construction + final-stage solver.
+
+This is the public API tying the paper together (§4.4):
+
+    solution = solve_dmmc(points, k, spec, ..., setting="mapreduce")
+
+1. build a (1-eps)-coreset with the chosen setting
+   (sequential Alg. 1 / streaming Alg. 2 / MapReduce shard_map);
+2. run the final solver on the coreset only:
+   - sum       -> AMT local search (gamma=0), the paper's choice;
+   - others    -> exhaustive search (exact on the coreset).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import geometry
+from .coreset import seq_coreset, seq_coreset_host
+from .diversity import Variant, diversity
+from .exhaustive import exhaustive_best
+from .local_search import local_search_sum
+from .mapreduce import mapreduce_coreset
+from .matroid import MatroidSpec, make_host_matroid
+from .streaming import stream_coreset
+
+
+@dataclasses.dataclass
+class DMMCSolution:
+    indices: np.ndarray  # selected point indices into S
+    diversity: float
+    coreset_indices: np.ndarray
+    coreset_size: int
+    timings: dict
+    info: dict
+
+
+def _final_solve(
+    points: np.ndarray,
+    cats: Optional[np.ndarray],
+    spec: MatroidSpec,
+    caps: Optional[np.ndarray],
+    k: int,
+    coreset_idx: np.ndarray,
+    variant: Variant,
+    oracle=None,
+    gamma: float = 0.0,
+) -> tuple[list[int], float]:
+    matroid = make_host_matroid(
+        spec,
+        None if cats is None else np.asarray(cats),
+        caps,
+        points.shape[0],
+        k,
+        oracle,
+    )
+    sub = np.asarray(coreset_idx, np.int64)
+    # distance matrix over coreset only (never over S)
+    pts = np.asarray(
+        geometry.normalize_for_metric(jnp.asarray(points[sub]), "euclidean")
+    )
+    Dsub = np.asarray(geometry.dists(jnp.asarray(pts), jnp.asarray(pts)))
+    # map into a matrix indexed by original ids via a wrapper matroid view
+    local = {int(g): i for i, g in enumerate(sub)}
+
+    class _View:
+        def can_extend(self, idxs, x):
+            return matroid.can_extend([int(sub[i]) for i in idxs], int(sub[x]))
+
+        def is_independent(self, idxs):
+            return matroid.is_independent([int(sub[i]) for i in idxs])
+
+    view = _View()
+    locals_ = list(range(len(sub)))
+    if variant == "sum":
+        X, val, _ = local_search_sum(Dsub, view, k, locals_, gamma=gamma)
+    else:
+        X, val, _complete = exhaustive_best(Dsub, view, k, locals_, variant)
+    return [int(sub[i]) for i in X], float(val)
+
+
+def solve_dmmc(
+    points: np.ndarray,
+    k: int,
+    spec: MatroidSpec,
+    *,
+    cats: Optional[np.ndarray] = None,
+    caps: Optional[np.ndarray] = None,
+    variant: Variant = "sum",
+    eps: Optional[float] = None,
+    tau: Optional[int] = None,
+    setting: str = "sequential",  # sequential | streaming | mapreduce
+    metric: geometry.Metric = "euclidean",
+    mesh=None,
+    data_axes: Sequence[str] = ("data",),
+    round2_tau: Optional[int] = None,
+    oracle=None,
+    gamma: float = 0.0,
+) -> DMMCSolution:
+    """Solve a DMMC instance end to end. Exactly one of eps/tau."""
+    assert (eps is None) != (tau is None)
+    n, d = points.shape
+    t0 = time.perf_counter()
+
+    cats_arr = (
+        np.zeros((n, 1), np.int32)
+        if cats is None
+        else np.asarray(cats, np.int32).reshape(n, -1)
+    )
+    pts_norm = geometry.normalize_for_metric(
+        jnp.asarray(points, jnp.float32), metric
+    )
+
+    if setting == "sequential":
+        idx, info = seq_coreset_host(
+            np.asarray(pts_norm),
+            cats_arr,
+            spec,
+            caps,
+            k,
+            eps=eps,
+            tau=tau,
+            metric="euclidean",  # already normalized
+            oracle=oracle,
+        )
+    elif setting == "streaming":
+        assert tau is not None, "streaming is parameterized by tau (§5.2)"
+        caps_j = None if caps is None else jnp.asarray(caps, jnp.int32)
+        cs, _st = stream_coreset(
+            pts_norm, jnp.asarray(cats_arr), jnp.ones((n,), bool),
+            spec, caps_j, k, tau,
+        )
+        idx = np.asarray(cs.src_idx)[np.asarray(cs.valid)]
+        info = dict(tau=tau, size=int(idx.size))
+    elif setting == "mapreduce":
+        assert mesh is not None and tau is not None
+        caps_j = None if caps is None else jnp.asarray(caps, jnp.int32)
+        shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+        pad = -n % shards
+        pts_p = jnp.pad(pts_norm, ((0, pad), (0, 0)))
+        cats_p = jnp.pad(jnp.asarray(cats_arr), ((0, pad), (0, 0)))
+        val_p = jnp.pad(jnp.ones((n,), bool), (0, pad))
+        tau_local = max(1, tau // shards)
+        cs, ovf = mapreduce_coreset(
+            mesh, pts_p, cats_p, val_p, spec, caps_j, k, tau_local,
+            data_axes=data_axes, round2_tau=round2_tau,
+        )
+        valid = np.asarray(cs.valid)
+        idx = np.unique(np.asarray(cs.src_idx)[valid])
+        idx = idx[(idx >= 0) & (idx < n)]  # drop padding artifacts
+        info = dict(tau=tau, shards=shards, size=int(idx.size),
+                    overflow=int(ovf))
+    else:
+        raise ValueError(setting)
+
+    t1 = time.perf_counter()
+    sol_idx, val = _final_solve(
+        np.asarray(pts_norm), cats_arr, spec, caps, k,
+        np.asarray(idx), variant, oracle, gamma,
+    )
+    t2 = time.perf_counter()
+
+    return DMMCSolution(
+        indices=np.asarray(sol_idx, np.int64),
+        diversity=val,
+        coreset_indices=np.asarray(idx, np.int64),
+        coreset_size=int(np.asarray(idx).size),
+        timings=dict(coreset_s=t1 - t0, solver_s=t2 - t1, total_s=t2 - t0),
+        info=info,
+    )

@@ -1,0 +1,401 @@
+"""Streaming coreset construction (paper Alg. 2 "StreamCoreset" + the
+tau-controlled doubling variant of §5.2), as a single jit'd lax.scan.
+
+State (all static shapes; TCAP centers, SLOT delegate slots per center):
+  R          scalar estimate (diameter for Alg. 2; radius for the variant)
+  x1         first stream point (Alg. 2's anchor for the diameter estimate)
+  centers    f32[TCAP, d], cvalid bool[TCAP]
+  del_*      delegate buffers per center: points f32[TCAP, SLOT, d],
+             cats int32[TCAP, SLOT, gamma], valid bool[TCAP, SLOT],
+             src int32[TCAP, SLOT]
+
+Per point: nearest center; if farther than the new-center threshold, open a
+center (the point is its own first delegate — Alg. 2); else HANDLE(x, z).
+HANDLE is matroid-specific and matches Alg. 2 case-by-case:
+  partition    add iff |D_z| < k and cat-count < cap (D_z stays independent)
+  uniform      add iff |D_z| < k
+  transversal  add iff some category of x has < k delegates; then try the
+               shrink step with a *greedy* matching witness (a greedy size-k
+               matching proves an independent size-k subset exists; sound,
+               possibly later than the paper's exact check — DESIGN.md §8)
+Restructuring merges dropped centers' delegates into their nearest survivor
+via the same HANDLE (Alg. 2's merge loop).
+
+General matroids need a host oracle => use ``stream_coreset_host`` (plain
+python loop; streaming is single-machine in the paper anyway).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .coreset import Coreset
+from .matroid import MatroidSpec
+
+_BIG = jnp.float32(jnp.finfo(jnp.float32).max)
+
+
+class StreamState(NamedTuple):
+    R: jnp.ndarray
+    x1: jnp.ndarray  # (d,)
+    n_seen: jnp.ndarray  # int32, number of (valid) points consumed
+    centers: jnp.ndarray  # (TCAP, d)
+    cvalid: jnp.ndarray  # (TCAP,)
+    dp: jnp.ndarray  # (TCAP, SLOT, d)
+    dc: jnp.ndarray  # (TCAP, SLOT, gamma)
+    dv: jnp.ndarray  # (TCAP, SLOT)
+    ds: jnp.ndarray  # (TCAP, SLOT)
+    overflow: jnp.ndarray  # int32: forced-discard count (transversal cap)
+
+
+def _dists_to_centers(x, centers, cvalid):
+    diff = centers - x[None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    d = jnp.sqrt(jnp.maximum(d2, 0.0))
+    return jnp.where(cvalid, d, _BIG)
+
+
+def _handle(spec: MatroidSpec, k: int, caps, st: StreamState, z, x, xc, xsrc):
+    """Alg. 2 HANDLE(x, z, D_z). Returns updated state (+overflow count)."""
+    slots_v = st.dv[z]  # (SLOT,)
+    cnt = jnp.sum(slots_v.astype(jnp.int32))
+    slot_cap = slots_v.shape[0]
+    free_slot = jnp.argmin(slots_v)  # first False (all True -> 0, guarded)
+    has_room = ~jnp.all(slots_v)
+
+    if spec.kind == "uniform":
+        add = cnt < k
+        forced = jnp.int32(0)
+    elif spec.kind == "partition":
+        c = xc[0]
+        same = slots_v & (st.dc[z, :, 0] == c)
+        add = (cnt < k) & (jnp.sum(same.astype(jnp.int32)) < caps[c])
+        forced = jnp.int32(0)
+    elif spec.kind == "transversal":
+        # count of delegates holding each category of x
+        match = (st.dc[z][:, :, None] == xc[None, None, :]) & (
+            xc[None, None, :] >= 0
+        )  # (SLOT, gamma, gamma_x)
+        holds = jnp.any(match, axis=1) & slots_v[:, None]  # (SLOT, gamma_x)
+        cnts = jnp.sum(holds.astype(jnp.int32), axis=0)  # (gamma_x,)
+        short = (cnts < k) & (xc >= 0)
+        want = jnp.any(short)
+        add = want & has_room
+        forced = (want & ~has_room).astype(jnp.int32)
+    else:  # pragma: no cover
+        raise ValueError(f"jit HANDLE not defined for {spec.kind!r}")
+
+    add = add & has_room
+
+    def do_add(st: StreamState) -> StreamState:
+        return st._replace(
+            dp=st.dp.at[z, free_slot].set(x),
+            dc=st.dc.at[z, free_slot].set(xc),
+            dv=st.dv.at[z, free_slot].set(True),
+            ds=st.ds.at[z, free_slot].set(xsrc),
+        )
+
+    st = jax.lax.cond(add, do_add, lambda s: s, st)
+    st = st._replace(overflow=st.overflow + forced)
+
+    if spec.kind == "transversal":
+        st = jax.lax.cond(add, lambda s: _shrink(spec, k, s, z), lambda s: s, st)
+    return st
+
+
+def _shrink(spec: MatroidSpec, k: int, st: StreamState, z):
+    """Greedy-matching shrink: if a greedy matching of D_z covers k slots,
+    keep exactly those slots (a witnessed independent set of size k)."""
+    h = spec.num_categories
+    slots_v = st.dv[z]
+    cats = st.dc[z]  # (SLOT, gamma)
+    slot_n, gamma = cats.shape
+
+    def body(s, carry):
+        used, matched = carry
+
+        def try_slot(carry):
+            used, matched = carry
+            free = (cats[s] >= 0) & ~used[jnp.maximum(cats[s], 0)]
+            j = jnp.argmax(free)  # first free category slot
+            ok = jnp.any(free)
+            cat = jnp.maximum(cats[s, j], 0)
+            used = jax.lax.cond(
+                ok, lambda u: u.at[cat].set(True), lambda u: u, used
+            )
+            matched = matched.at[s].set(ok)
+            return used, matched
+
+        return jax.lax.cond(slots_v[s], try_slot, lambda c: c, carry)
+
+    used0 = jnp.zeros((h,), bool)
+    matched0 = jnp.zeros((slot_n,), bool)
+    used, matched = jax.lax.fori_loop(
+        0, slot_n, body, (used0, matched0)
+    )
+    size = jnp.sum(matched.astype(jnp.int32))
+
+    def do_shrink(st: StreamState) -> StreamState:
+        return st._replace(dv=st.dv.at[z].set(matched & slots_v))
+
+    return jax.lax.cond(size >= k, do_shrink, lambda s: s, st)
+
+
+def _merge_delegates(spec, k, caps, st: StreamState, dead_mask):
+    """Alg. 2 restructure merge: delegates of dropped centers are HANDLE'd
+    into their nearest surviving center."""
+    tcap, slot_n = st.dv.shape
+
+    def per_slot(i, st):
+        ci, si = i // slot_n, i % slot_n
+        is_live_del = dead_mask[ci] & st.dv[ci, si]
+
+        def do(st: StreamState) -> StreamState:
+            x = st.dp[ci, si]
+            d = _dists_to_centers(x, st.centers, st.cvalid)
+            z = jnp.argmin(d)
+            return _handle(spec, k, caps, st, z, x, st.dc[ci, si], st.ds[ci, si])
+
+        return jax.lax.cond(is_live_del, do, lambda s: s, st)
+
+    st = jax.lax.fori_loop(0, tcap * slot_n, per_slot, st)
+    # clear dropped centers' own buffers
+    return st._replace(
+        dv=st.dv & ~dead_mask[:, None],
+    )
+
+
+def _filter_centers(st: StreamState, thr):
+    """Greedy maximal subset of centers with pairwise distance > thr."""
+    c = st.centers
+    d2 = jnp.sum((c[:, None, :] - c[None, :, :]) ** 2, axis=-1)
+    d = jnp.sqrt(jnp.maximum(d2, 0.0))
+    tcap = c.shape[0]
+
+    def body(i, keep):
+        near_kept = jnp.any(keep & st.cvalid & (d[i] <= thr) &
+                            (jnp.arange(tcap) < i))
+        ki = st.cvalid[i] & ~near_kept
+        return keep.at[i].set(ki)
+
+    keep = jax.lax.fori_loop(0, tcap, body, jnp.zeros((tcap,), bool))
+    return keep
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "k", "tau", "slot_cap", "variant", "c_const"),
+)
+def stream_coreset(
+    points: jnp.ndarray,  # (n, d) metric-normalized stream order
+    cats: jnp.ndarray,  # (n, gamma)
+    valid: jnp.ndarray,  # (n,)
+    spec: MatroidSpec,
+    caps: Optional[jnp.ndarray],
+    k: int,
+    tau: int,
+    *,
+    slot_cap: Optional[int] = None,
+    variant: str = "radius",  # "radius" (§5.2 tau-controlled) | "diameter" (Alg. 2)
+    eps: float = 0.5,
+    c_const: int = 32,
+) -> tuple[Coreset, StreamState]:
+    """One-pass streaming coreset. Returns (coreset, final state)."""
+    n, d = points.shape
+    gamma = cats.shape[1]
+    tcap = tau + 1
+    if slot_cap is None:
+        slot_cap = k if spec.kind in ("uniform", "partition") else max(
+            spec.gamma, 1
+        ) * k * k
+    caps_arr = caps if caps is not None else jnp.zeros((1,), jnp.int32)
+
+    st0 = StreamState(
+        R=jnp.float32(0.0),
+        x1=jnp.zeros((d,), jnp.float32),
+        n_seen=jnp.int32(0),
+        centers=jnp.zeros((tcap, d), jnp.float32),
+        cvalid=jnp.zeros((tcap,), bool),
+        dp=jnp.zeros((tcap, slot_cap, d), jnp.float32),
+        dc=jnp.full((tcap, slot_cap, gamma), -1, jnp.int32),
+        dv=jnp.zeros((tcap, slot_cap), bool),
+        ds=jnp.full((tcap, slot_cap), -1, jnp.int32),
+        overflow=jnp.int32(0),
+    )
+
+    def open_center(st: StreamState, x, xc, xsrc) -> StreamState:
+        slot = jnp.argmin(st.cvalid)
+        return st._replace(
+            centers=st.centers.at[slot].set(x),
+            cvalid=st.cvalid.at[slot].set(True),
+            dp=st.dp.at[slot, 0].set(x),
+            dc=st.dc.at[slot, 0].set(xc),
+            dv=st.dv.at[slot, 0].set(True),
+            ds=st.ds.at[slot, 0].set(xsrc),
+        )
+
+    def restructure_radius(st: StreamState) -> StreamState:
+        """tau-variant: while #centers > tau: R *= 2; filter; merge."""
+
+        def cond(st):
+            return jnp.sum(st.cvalid.astype(jnp.int32)) > tau
+
+        def body(st):
+            R = st.R * 2.0
+            st = st._replace(R=R)
+            keep = _filter_centers(st, R)
+            dead = st.cvalid & ~keep
+            st = st._replace(cvalid=keep)
+            return _merge_delegates(spec, k, caps_arr, st, dead)
+
+        return jax.lax.while_loop(cond, body, st)
+
+    def restructure_diameter(st: StreamState) -> StreamState:
+        """Alg. 2: after R update, filter at eps*R/(ck) and merge."""
+        thr = jnp.float32(eps) * st.R / (c_const * k)
+        keep = _filter_centers(st, thr)
+        dead = st.cvalid & ~keep
+        st = st._replace(cvalid=keep)
+        return _merge_delegates(spec, k, caps_arr, st, dead)
+
+    def step(st: StreamState, inp):
+        x, xc, xsrc, v = inp
+        t = st.n_seen
+
+        def skip(st):
+            return st
+
+        def first(st: StreamState) -> StreamState:
+            st = open_center(st, x, xc, xsrc)
+            return st._replace(x1=x, n_seen=t + 1)
+
+        def second(st: StreamState) -> StreamState:
+            r0 = jnp.sqrt(
+                jnp.maximum(jnp.sum((x - st.x1) ** 2), 0.0)
+            )
+            st = open_center(st, x, xc, xsrc)
+            R = r0 if variant == "diameter" else r0 / 2.0
+            return st._replace(R=jnp.maximum(R, 1e-30), n_seen=t + 1)
+
+        def general(st: StreamState) -> StreamState:
+            dists = _dists_to_centers(x, st.centers, st.cvalid)
+            z = jnp.argmin(dists)
+            dmin = dists[z]
+            if variant == "diameter":
+                thr_new = 2.0 * eps * st.R / (c_const * k)
+            else:
+                thr_new = 2.0 * st.R
+
+            def as_new(st):
+                return open_center(st, x, xc, xsrc)
+
+            def as_handle(st):
+                return _handle(spec, k, caps_arr, st, z, x, xc, xsrc)
+
+            st = jax.lax.cond(dmin > thr_new, as_new, as_handle, st)
+
+            if variant == "diameter":
+                d1 = jnp.sqrt(jnp.maximum(jnp.sum((x - st.x1) ** 2), 0.0))
+
+                def upd(st):
+                    st = st._replace(R=d1)
+                    return restructure_diameter(st)
+
+                st = jax.lax.cond(d1 > 2.0 * st.R, upd, lambda s: s, st)
+            else:
+                st = jax.lax.cond(
+                    jnp.sum(st.cvalid.astype(jnp.int32)) > tau,
+                    restructure_radius,
+                    lambda s: s,
+                    st,
+                )
+            return st._replace(n_seen=t + 1)
+
+        branch = jnp.where(t == 0, 0, jnp.where(t == 1, 1, 2))
+        st = jax.lax.cond(
+            v,
+            lambda st: jax.lax.switch(branch, [first, second, general], st),
+            skip,
+            st,
+        )
+        return st, None
+
+    st, _ = jax.lax.scan(
+        step,
+        st0,
+        (points, cats, jnp.arange(n, dtype=jnp.int32), valid.astype(bool)),
+    )
+    # assemble coreset from delegate buffers
+    flat_valid = st.dv.reshape(-1) & jnp.repeat(st.cvalid, st.dv.shape[1])
+    cs = Coreset(
+        points=st.dp.reshape(-1, d),
+        cats=st.dc.reshape(-1, gamma),
+        valid=flat_valid,
+        src_idx=jnp.where(flat_valid, st.ds.reshape(-1), -1),
+    )
+    return cs, st
+
+
+def stream_coreset_host(
+    points: np.ndarray,
+    cats: Optional[np.ndarray],
+    matroid,
+    k: int,
+    tau: int,
+) -> np.ndarray:
+    """Host-loop streaming for general matroids (oracle-based HANDLE).
+
+    HANDLE 'other' case of Alg. 2: always add; if D_z gains an independent
+    subset of size k, shrink to it. Returns selected indices.
+    """
+    n, d = points.shape
+    R = None
+    centers: list[int] = []
+    delegates: dict[int, list[int]] = {}
+
+    def dist(i, j):
+        return float(np.linalg.norm(points[i] - points[j]))
+
+    for i in range(n):
+        if len(centers) < 2:
+            centers.append(i)
+            delegates[i] = [i]
+            if len(centers) == 2:
+                R = dist(centers[0], centers[1]) / 2.0 or 1e-30
+            continue
+        dmin, z = min((dist(i, c), c) for c in centers)
+        if dmin > 2.0 * R:
+            centers.append(i)
+            delegates[i] = [i]
+        else:
+            dz = delegates[z]
+            sub = matroid.greedy_independent(dz, k)
+            if len(sub) < k:
+                dz.append(i)
+                sub2 = matroid.greedy_independent(dz, k)
+                if len(sub2) == k:
+                    delegates[z] = sub2
+        while len(centers) > tau:
+            R *= 2.0
+            kept: list[int] = []
+            for c in centers:
+                if all(dist(c, c2) > R for c2 in kept):
+                    kept.append(c)
+            dropped = [c for c in centers if c not in kept]
+            centers = kept
+            for c in dropped:
+                for x in delegates.pop(c):
+                    dmin, z = min((dist(x, c2), c2) for c2 in centers)
+                    dz = delegates[z]
+                    sub = matroid.greedy_independent(dz, k)
+                    if len(sub) < k:
+                        dz.append(x)
+                        sub2 = matroid.greedy_independent(dz, k)
+                        if len(sub2) == k:
+                            delegates[z] = sub2
+    out = sorted({x for dz in delegates.values() for x in dz})
+    return np.asarray(out, np.int64)

@@ -1,0 +1,86 @@
+"""Fused GMM farthest-point step as a Pallas kernel (TPU).
+
+One GMM iteration reads the point matrix once: for each (bn, d) VMEM panel it
+computes the distance of each row to the new center z, folds it into the
+running min-distance vector, and emits the per-block max/argmax of the
+updated min-distances (the candidate next center). The tiny (gn,) block
+reductions are finished on the host side of the op (ops.gmm_update).
+
+Without fusion this is three HBM passes over (n,)-vectors plus one over
+(n, d); fused it is a single pass over (n, d) — the GMM loop is memory-bound
+at large n, so this is the paper's O(n tau) distance-oracle loop at roofline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gmm_kernel(x_ref, z_ref, md_ref, v_ref, nm_ref, bv_ref, bi_ref):
+    x = x_ref[...].astype(jnp.float32)  # (bn, d)
+    z = z_ref[...].astype(jnp.float32)  # (1, d)
+    md = md_ref[...]  # (bn, 1) f32
+    valid = v_ref[...] != 0  # (bn, 1)
+    diff = x - z
+    d2 = jnp.sum(diff * diff, axis=1, keepdims=True)  # (bn, 1)
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+    nm = jnp.minimum(md, dist)
+    nm_ref[...] = nm
+    masked = jnp.where(valid, nm, -1.0)  # (bn, 1)
+    bn = masked.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+    best = jnp.max(masked)
+    # first index attaining the max (deterministic tie-break)
+    at = jnp.where(masked == best, iota, bn)
+    arg = jnp.min(at)
+    bv_ref[0, 0] = best
+    bi_ref[0, 0] = arg.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gmm_update(
+    x: jnp.ndarray,  # (n, d)
+    z: jnp.ndarray,  # (d,)
+    min_dist: jnp.ndarray,  # (n,) f32
+    valid: jnp.ndarray,  # (n,) bool
+    *,
+    block_n: int = 1024,
+    interpret: bool = False,
+):
+    """Returns (new_min (n,) f32, far_idx int32, far_val f32)."""
+    n, d = x.shape
+    bn = min(block_n, max(8, n))
+    pn = -n % bn
+    xp = jnp.pad(x, ((0, pn), (0, 0)))
+    mdp = jnp.pad(min_dist.astype(jnp.float32), (0, pn))[:, None]
+    vp = jnp.pad(valid.astype(jnp.int32), (0, pn))[:, None]
+    gn = xp.shape[0] // bn
+    nm, bv, bi = pl.pallas_call(
+        _gmm_kernel,
+        grid=(gn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0], 1), jnp.float32),
+            jax.ShapeDtypeStruct((gn, 1), jnp.float32),
+            jax.ShapeDtypeStruct((gn, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp, z[None, :], mdp, vp)
+    new_min = nm[:n, 0]
+    blk = jnp.argmax(bv[:, 0])
+    far_val = bv[blk, 0]
+    far_idx = (blk * bn + bi[blk, 0]).astype(jnp.int32)
+    return new_min, far_idx, far_val

@@ -1,0 +1,81 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy: use the Pallas TPU kernels when running on TPU; otherwise
+fall back to the jnp oracles in ``ref.py`` (identical semantics — the kernel
+tests assert allclose between the two across shape/dtype sweeps, running the
+Pallas path in interpret mode on CPU).
+
+``force`` lets tests/benchmarks pin a path: "pallas" | "ref" | "interpret".
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash as _flash
+from . import gmm_step as _gmm_step
+from . import pdist as _pdist
+from . import ref as _ref
+from . import ssd as _ssd
+
+_FORCE = os.environ.get("REPRO_KERNEL_BACKEND", "")  # "", "pallas", "ref", "interpret"
+
+
+def _mode(force: Optional[str]) -> str:
+    f = force or _FORCE
+    if f:
+        return f
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def pairwise_sqdist(x, y, *, force: Optional[str] = None):
+    m = _mode(force)
+    if m == "ref":
+        return _ref.pairwise_sqdist(x, y)
+    return _pdist.pairwise_sqdist(x, y, interpret=(m == "interpret"))
+
+
+def pairwise_dist(x, y, *, force: Optional[str] = None):
+    return jnp.sqrt(pairwise_sqdist(x, y, force=force))
+
+
+def gmm_update(x, z, min_dist, valid, *, force: Optional[str] = None):
+    """Fused GMM step: (new_min, far_idx, far_val). See kernels/gmm_step.py."""
+    m = _mode(force)
+    if m == "ref":
+        return _ref.gmm_update(x, z, min_dist, valid)
+    return _gmm_step.gmm_update(
+        x, z, min_dist, valid, interpret=(m == "interpret")
+    )
+
+
+def ssd_intra_chunk(xbar, loga, B, C, *, force: Optional[str] = None):
+    """Batched SSD intra-chunk. xbar: (g, q, p), loga: (g, q), B/C: (g, q, n).
+
+    Returns (y_intra (g,q,p), state (g,n,p), decay_from_start (g,q),
+    total_decay (g,)).
+    """
+    m = _mode(force)
+    if m == "ref":
+        y, s, dfs, td = jax.vmap(_ref.ssd_intra_chunk)(xbar, loga, B, C)
+        return y, s, dfs, td
+    y, s = _ssd.ssd_intra_chunk_batched(
+        xbar, loga, B, C, interpret=(m == "interpret")
+    )
+    cum = jnp.cumsum(loga.astype(jnp.float32), axis=-1)
+    return y, s, jnp.exp(cum), jnp.exp(cum[:, -1])
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, q_block=512, kv_block=1024,
+                        force: Optional[str] = None):
+    """Fused flash-attention forward. q/k/v: (BH, S, hd), heads flattened."""
+    m = _mode(force)
+    if m == "ref":
+        return _ref.flash_attention_fwd(q, k, v, causal=causal)
+    return _flash.flash_attention_fwd(
+        q, k, v, causal=causal, q_block=q_block, kv_block=kv_block,
+        interpret=(m == "interpret"),
+    )

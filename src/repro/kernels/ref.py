@@ -1,0 +1,141 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests assert against, and also the
+dispatch target of ``ops`` on non-TPU backends (XLA:CPU fuses them well
+enough for the CPU test/bench environment).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# pdist
+# --------------------------------------------------------------------------
+
+
+def pairwise_sqdist(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """(n, d), (m, d) -> (n, m) squared Euclidean distances, f32 accumulate."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    xn = jnp.sum(x * x, axis=-1)
+    yn = jnp.sum(y * y, axis=-1)
+    d2 = xn[:, None] + yn[None, :] - 2.0 * (x @ y.T)
+    return jnp.maximum(d2, 0.0)
+
+
+# --------------------------------------------------------------------------
+# gmm_step: fused distance-to-center + running-min + global argmax
+# --------------------------------------------------------------------------
+
+
+def gmm_update(
+    x: jnp.ndarray,  # (n, d)
+    z: jnp.ndarray,  # (d,)
+    min_dist: jnp.ndarray,  # (n,)
+    valid: jnp.ndarray,  # (n,) bool
+):
+    """Returns (new_min (n,), far_idx int32, far_val f32).
+
+    new_min[i] = min(min_dist[i], d(x_i, z)); far = argmax over valid points
+    of new_min (the next GMM center and the current clustering radius).
+    """
+    x = x.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    diff = x - z[None, :]
+    d = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+    new_min = jnp.minimum(min_dist, d)
+    masked = jnp.where(valid, new_min, -1.0)
+    far_idx = jnp.argmax(masked).astype(jnp.int32)
+    far_val = masked[far_idx]
+    return new_min, far_idx, far_val
+
+
+# --------------------------------------------------------------------------
+# ssd: Mamba2 intra-chunk state-space-duality block
+# --------------------------------------------------------------------------
+
+
+def ssd_intra_chunk(
+    xbar: jnp.ndarray,  # (q, p)   dt-scaled inputs for one (chunk, head)
+    loga: jnp.ndarray,  # (q,)     log decay per step (= dt * A, A < 0)
+    B: jnp.ndarray,  # (q, n)
+    C: jnp.ndarray,  # (q, n)
+):
+    """Returns (y_intra (q, p), state (n, p), decay_from_start (q,),
+    total_decay scalar).
+
+    y_intra[t] = sum_{s<=t} exp(cum[t]-cum[s]) (C_t . B_s) xbar[s]
+    state      = sum_s exp(cum[q-1]-cum[s]) B_s (x) xbar[s]   (n, p)
+    """
+    xbar = xbar.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    loga = loga.astype(jnp.float32)
+    q = xbar.shape[0]
+    cum = jnp.cumsum(loga)
+    # L[t, s] = exp(cum[t] - cum[s]) for s <= t else 0
+    diff = cum[:, None] - cum[None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(mask, jnp.exp(diff), 0.0)
+    G = C @ B.T  # (q, q)
+    y_intra = (G * L) @ xbar  # (q, p)
+    decay_to_end = jnp.exp(cum[-1] - cum)  # (q,)
+    state = (B * decay_to_end[:, None]).T @ xbar  # (n, p)
+    decay_from_start = jnp.exp(cum)  # (q,) prod_{r<=t} a_r
+    return y_intra, state, decay_from_start, jnp.exp(cum[-1])
+
+
+def ssd_reference_scan(
+    xbar: jnp.ndarray,  # (l, p)
+    loga: jnp.ndarray,  # (l,)
+    B: jnp.ndarray,  # (l, n)
+    C: jnp.ndarray,  # (l, n)
+    s0: jnp.ndarray | None = None,  # (n, p)
+):
+    """Step-by-step recurrent oracle: the ground truth for SSD.
+
+    s_t = a_t s_{t-1} + B_t (x) xbar_t ; y_t = C_t @ s_t
+    """
+    l, p = xbar.shape
+    n = B.shape[1]
+    if s0 is None:
+        s0 = jnp.zeros((n, p), jnp.float32)
+
+    def step(s, inp):
+        xb, la, b, c = inp
+        s = jnp.exp(la) * s + b[:, None] * xb[None, :]
+        y = c @ s
+        return s, y
+
+    s_fin, ys = jax.lax.scan(
+        step,
+        s0.astype(jnp.float32),
+        (
+            xbar.astype(jnp.float32),
+            loga.astype(jnp.float32),
+            B.astype(jnp.float32),
+            C.astype(jnp.float32),
+        ),
+    )
+    return ys, s_fin
+
+
+# --------------------------------------------------------------------------
+# flash forward (dense oracle)
+# --------------------------------------------------------------------------
+
+
+def flash_attention_fwd(q, k, v, causal=True):
+    """(BH, Sq, hd) x (BH, Skv, hd) dense-softmax oracle."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    hd = q.shape[-1]
+    s = jnp.einsum("bqh,bkh->bqk", q, k) / (hd ** 0.5)
+    if causal:
+        m = jnp.arange(q.shape[1])[:, None] >= jnp.arange(k.shape[1])[None]
+        s = jnp.where(m[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v)

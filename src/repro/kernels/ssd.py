@@ -1,0 +1,83 @@
+"""Mamba2 SSD intra-chunk Pallas kernel (TPU).
+
+Computes, for one (batch*chunk, head) grid cell with chunk length q, head dim
+p, state dim n:
+
+    y_intra = (C B^T (*) L) @ xbar          (q, p)   -- MXU matmuls
+    state   = B^T diag(exp(cum[-1]-cum)) xbar  (n, p)
+
+where L[t, s] = exp(cum[t] - cum[s]) for s <= t (the within-chunk decay),
+cum = cumsum(loga). The inter-chunk recurrence (a length-(l/q) scan over
+(n, p) states) is tiny and is done by the caller in plain JAX.
+
+TPU adaptation: the Mamba2 paper phrases SSD so the inner work is matmuls —
+exactly what the MXU wants. Block choice (q, n, p) = (128|256, 64|128, 64)
+keeps all operands VMEM-resident: q*n*2 + q*p + q*q + n*p floats ~< 1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(xbar_ref, loga_ref, b_ref, c_ref, y_ref, s_ref):
+    xbar = xbar_ref[0].astype(jnp.float32)  # (q, p)
+    loga = loga_ref[0].astype(jnp.float32)  # (q, 1) -> (q,)
+    B = b_ref[0].astype(jnp.float32)  # (q, n)
+    C = c_ref[0].astype(jnp.float32)  # (q, n)
+    q = xbar.shape[0]
+    cum = jnp.cumsum(loga[:, 0])  # (q,)
+    diff = cum[:, None] - cum[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(row >= col, jnp.exp(diff), 0.0)
+    G = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (q, q)
+    y = jax.lax.dot_general(
+        G * L, xbar, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (q, p)
+    y_ref[0] = y
+    decay_to_end = jnp.exp(cum[-1] - cum)  # (q,)
+    Bw = B * decay_to_end[:, None]  # (q, n)
+    state = jax.lax.dot_general(
+        Bw, xbar, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (n, p)
+    s_ref[0] = state
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk_batched(
+    xbar: jnp.ndarray,  # (g, q, p)  g = batch*chunks*heads flattened
+    loga: jnp.ndarray,  # (g, q)
+    B: jnp.ndarray,  # (g, q, n)
+    C: jnp.ndarray,  # (g, q, n)
+    *,
+    interpret: bool = False,
+):
+    """Returns (y_intra (g, q, p), state (g, n, p))."""
+    g, q, p = xbar.shape
+    n = B.shape[-1]
+    y, s = pl.pallas_call(
+        _ssd_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, p), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, q, p), jnp.float32),
+            jax.ShapeDtypeStruct((g, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xbar, loga[..., None], B, C)
+    return y, s

@@ -1,0 +1,423 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract the roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+Per cell this prints/records:
+  * compiled.memory_analysis()  (per-device bytes: args/output/temps)
+  * compiled.cost_analysis()    (per-device HLO FLOPs / bytes accessed)
+  * collective operand bytes parsed from the post-opt HLO (per device)
+  * the three roofline terms + dominant bottleneck + MODEL_FLOPS ratio
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. cost_analysis/memory_analysis were verified per-device (see
+EXPERIMENTS.md §Dry-run calibration note).
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from ..models.model import LM
+from ..models.sharding import (
+    batch_spec, cache_specs, param_specs, set_activation_mesh,
+)
+from ..train.optimizer import AdamWConfig
+from ..train.train_state import StepConfig, abstract_train_state, make_train_step
+from .hlo_cost import analyze as hlo_analyze
+from .mesh import data_axes, make_production_mesh
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link
+
+
+# --------------------------------------------------------------------------
+# per-cell configuration policy (memory knobs; see EXPERIMENTS.md §Dry-run)
+# --------------------------------------------------------------------------
+
+
+def knobs_for(cfg, shape, n_dp: int, overrides: dict):
+    lm = LM(cfg)
+    n_params = lm.param_count()
+    big = n_params > 3e10
+    micro = overrides.get("microbatches")
+    if micro is None:
+        if shape.kind == "train" and n_params > 2e9:
+            micro = max(1, shape.global_batch // n_dp)
+        else:
+            micro = 1
+    opt = AdamWConfig(
+        moment_dtype=overrides.get(
+            "moment_dtype", "bfloat16" if big else "float32"
+        ),
+        master_dtype=overrides.get(
+            "master_dtype", None if big else "float32"
+        ),
+    )
+    step = StepConfig(
+        microbatches=micro,
+        accum_dtype=overrides.get(
+            "accum_dtype", "bfloat16" if big else "float32"
+        ),
+        skip_masked=overrides.get("skip_masked", False),
+    )
+    return lm, opt, step
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# --------------------------------------------------------------------------
+
+
+def input_specs(cfg, shape, lm: LM):
+    B, S = shape.global_batch, shape.seq_len
+    toks = jax.ShapeDtypeStruct(
+        (B, S if shape.kind != "decode" else 1), jnp.int32
+    )
+    img = None
+    if cfg.family == "vlm":
+        img = jax.ShapeDtypeStruct(
+            (B, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    if shape.kind == "decode":
+        caches = jax.eval_shape(lambda: lm.init_caches(B, S))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return dict(token=toks, caches=caches, pos=pos, img=img)
+    return dict(tokens=toks, img=img)
+
+
+# --------------------------------------------------------------------------
+# lowering per shape kind
+# --------------------------------------------------------------------------
+
+
+def build_lowered(cfg, shape, mesh, overrides):
+    fsdp = data_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in fsdp]))
+    lm, opt_cfg, step_cfg = knobs_for(cfg, shape, n_dp, overrides)
+    shardable = shape.global_batch % n_dp == 0 and shape.global_batch >= n_dp
+    set_activation_mesh(fsdp if shardable else None, "model")
+    bspec = batch_spec(shardable, fsdp)
+    pspecs = param_specs(lm.abstract_params(), fsdp)
+
+    def ns(tree):
+        """PartitionSpec pytree -> NamedSharding pytree on this mesh."""
+        return jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp) if isinstance(sp, P) else sp,
+            tree,
+            is_leaf=lambda x: isinstance(x, P) or x is None,
+        )
+
+    def shard(tree, specs):
+        return jax.tree.map(
+            lambda leaf, sp: jax.ShapeDtypeStruct(
+                leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, sp)
+            ),
+            tree, specs,
+        )
+
+    if shape.kind == "train":
+        state_abs = abstract_train_state(lm, opt_cfg)
+        opt_specs = {
+            "m": pspecs, "v": pspecs, "step": P(),
+        }
+        if "master" in state_abs["opt"]:
+            opt_specs["master"] = pspecs
+        state_specs = {"params": pspecs, "opt": opt_specs, "step": P()}
+        ins = input_specs(cfg, shape, lm)
+        batch_abs = {"tokens": ins["tokens"]}
+        batch_specs = {"tokens": bspec}
+        if ins["img"] is not None:
+            batch_abs["img"] = ins["img"]
+            batch_specs["img"] = P(*bspec, None, None)
+        fn = make_train_step(lm, opt_cfg, step_cfg, grad_specs=pspecs)
+        jfn = jax.jit(
+            fn,
+            in_shardings=ns((state_specs, batch_specs)),
+            out_shardings=ns((state_specs, None)),
+            donate_argnums=(0,),
+        )
+        with mesh:
+            lowered = jfn.lower(shard(state_abs, state_specs),
+                                shard(batch_abs, batch_specs))
+        return lm, lowered, dict(microbatches=step_cfg.microbatches)
+
+    if shape.kind == "prefill":
+        ins = input_specs(cfg, shape, lm)
+        args = (ins["tokens"],) + (
+            (ins["img"],) if ins["img"] is not None else ()
+        )
+        in_sh = (bspec,) + ((P(*bspec, None, None),) if ins["img"] is not None else ())
+        cspecs = cache_specs(
+            lm, fsdp, batch_shardable=shardable,
+            mode=overrides.get("cache_shard", "auto"),
+            tp_size=mesh.shape["model"],
+        )
+        out_sh = (P(*bspec, None), cspecs)
+
+        def prefill(params, tokens, img=None):
+            return lm.prefill(params, tokens, img)
+
+        jfn = jax.jit(
+            prefill,
+            in_shardings=ns((pspecs,) + in_sh),
+            out_shardings=ns(out_sh),
+        )
+        with mesh:
+            lowered = jfn.lower(
+                shard(lm.abstract_params(), pspecs), *args
+            )
+        return lm, lowered, {}
+
+    if shape.kind == "decode":
+        ins = input_specs(cfg, shape, lm)
+        cspecs = cache_specs(
+            lm, fsdp, batch_shardable=shardable,
+            mode=overrides.get("cache_shard", "auto"),
+            tp_size=mesh.shape["model"],
+        )
+
+        def serve_step(params, token, caches, pos, img=None):
+            return lm.decode_step(params, token, caches, pos, img)
+
+        img_args = (ins["img"],) if ins["img"] is not None else ()
+        img_specs = (P(*bspec, None, None),) if ins["img"] is not None else ()
+        jfn = jax.jit(
+            serve_step,
+            in_shardings=ns((pspecs, bspec, cspecs, P()) + img_specs),
+            out_shardings=ns((P(*bspec, None), cspecs)),
+            donate_argnums=(2,),
+        )
+        with mesh:
+            lowered = jfn.lower(
+                shard(lm.abstract_params(), pspecs),
+                ins["token"], shard(ins["caches"], cspecs), ins["pos"],
+                *img_args,
+            )
+        return lm, lowered, {}
+
+    raise ValueError(shape.kind)
+
+
+# --------------------------------------------------------------------------
+# MODEL_FLOPS (useful flops) estimator
+# --------------------------------------------------------------------------
+
+
+def model_flops(cfg, shape, lm: LM) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    n_active = lm.active_param_count()
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_ssm_heads = d_inner // cfg.ssm_head_dim if cfg.ssm_state else 0
+
+    n_attn = 0
+    if cfg.family in ("dense", "audio", "moe"):
+        n_attn = cfg.n_layers
+    elif cfg.family == "vlm":
+        n_attn = cfg.n_layers  # self + cross both attend
+    elif cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.shared_attn_every
+    n_mamba = 0
+    if cfg.family == "ssm":
+        n_mamba = cfg.n_layers
+    elif cfg.family == "hybrid":
+        n_mamba = cfg.n_layers
+
+    attn_dim = cfg.n_heads * cfg.hd if cfg.n_heads else 0
+
+    if shape.kind == "decode":
+        tokens = B
+        f = 2.0 * n_active * tokens
+        f += 4.0 * n_attn * B * S * attn_dim  # score+mix against the cache
+        f += 5.0 * n_mamba * B * n_ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+        return f
+
+    tokens = B * S
+    mult = 6.0 if shape.kind == "train" else 2.0
+    f = mult * n_active * tokens
+    # causal attention useful flops: 2*B*S^2*attn_dim fwd per layer (half of
+    # the full S^2 score/mix matmuls), x3 for train
+    f += (mult / 2.0) * 2.0 * n_attn * B * S * S * attn_dim
+    # SSD: chunked matmuls ~ 2*B*S*(Q + 2N)*d_inner fwd per layer
+    q = cfg.ssd_chunk
+    f += (mult / 2.0) * 2.0 * n_mamba * B * S * (q + 2 * cfg.ssm_state) * d_inner
+    return f
+
+
+# --------------------------------------------------------------------------
+# cell runner
+# --------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, overrides: dict,
+             out_dir: str | None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        print(f"SKIP {arch} x {shape_name}: full-attention arch at 500k "
+              "(DESIGN.md §7)")
+        return dict(arch=arch, shape=shape_name, mesh=mesh_kind,
+                    skipped="full-attention long-context")
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    lm, lowered, extra = build_lowered(cfg, shape, mesh, overrides)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # loop-aware accounting (XLA's cost_analysis counts while bodies once —
+    # with scan-over-layers that undercounts by ~n_layers; see hlo_cost.py)
+    la = hlo_analyze(hlo)
+
+    flops_dev = float(la["flops"])
+    bytes_dev = float(la["hbm_bytes"])
+    coll_dev = float(la["collective_bytes"])
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll_dev / LINK_BW
+    terms = dict(compute_s=compute_s, memory_s=memory_s, collective_s=coll_s)
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape, lm)
+    mf_dev = mf / n_chips
+    useful = mf_dev / flops_dev if flops_dev else 0.0
+
+    mem = dict(
+        argument_bytes=int(ma.argument_size_in_bytes),
+        output_bytes=int(ma.output_size_in_bytes),
+        temp_bytes=int(ma.temp_size_in_bytes),
+        alias_bytes=int(ma.alias_size_in_bytes),
+        peak_estimate_gib=round(
+            (ma.argument_size_in_bytes + ma.output_size_in_bytes
+             + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3
+        ),
+    )
+
+    rec = dict(
+        arch=arch, shape=shape_name, mesh=mesh_kind, chips=n_chips,
+        params=lm.param_count(), active_params=lm.active_param_count(),
+        per_device=dict(flops=flops_dev, hbm_bytes=bytes_dev,
+                        collective_bytes=coll_dev),
+        collectives=la["collectives"],
+        xla_cost_analysis=dict(
+            flops=float(ca.get("flops", 0.0)),
+            bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        ),
+        top_dots=[[round(f / 1e9, 2), m] for f, m in la["top_dots"][:8]],
+        top_collectives=[
+            [round(b / 1e9, 3), m] for b, m in la["top_collectives"][:8]
+        ],
+        terms_s=terms, dominant=dominant,
+        model_flops_global=mf, useful_flops_ratio=round(useful, 4),
+        roofline_bound_s=max(terms.values()),
+        memory=mem,
+        lower_s=round(t1 - t0, 1), compile_s=round(t2 - t1, 1),
+        **extra, **{f"override_{k}": v for k, v in overrides.items()},
+    )
+    print(json.dumps(rec, indent=2))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = overrides.get("tag", "base")
+        path = os.path.join(
+            out_dir, f"{arch}__{shape_name}__{mesh_kind}__{tag}.json"
+        )
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+def run_all(mesh_kinds: list[str], out_dir: str, timeout: int):
+    """Drive every cell in an isolated subprocess (compile-cache hygiene +
+    a hung compile cannot take down the sweep)."""
+    failures = []
+    for arch in ARCH_IDS:
+        for shape_name in SHAPES:
+            for mk in mesh_kinds:
+                cfg = get_config(arch)
+                if not shape_applicable(cfg, SHAPES[shape_name]):
+                    continue
+                tag = "base"
+                path = os.path.join(
+                    out_dir, f"{arch}__{shape_name}__{mk}__{tag}.json"
+                )
+                if os.path.exists(path):
+                    print(f"cached: {path}")
+                    continue
+                cmd = [
+                    sys.executable, "-m", "repro.launch.dryrun",
+                    "--arch", arch, "--shape", shape_name, "--mesh", mk,
+                    "--out-dir", out_dir,
+                ]
+                print("RUN", " ".join(cmd), flush=True)
+                try:
+                    r = subprocess.run(cmd, timeout=timeout)
+                    if r.returncode != 0:
+                        failures.append((arch, shape_name, mk, r.returncode))
+                except subprocess.TimeoutExpired:
+                    failures.append((arch, shape_name, mk, "timeout"))
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("all cells OK")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--timeout", type=int, default=1800)
+    # perf-iteration overrides
+    ap.add_argument("--microbatches", type=int)
+    ap.add_argument("--skip-masked", action="store_true")
+    ap.add_argument("--moment-dtype")
+    ap.add_argument("--master-dtype")
+    ap.add_argument("--accum-dtype")
+    ap.add_argument("--cache-shard", choices=["auto", "heads", "hd", "seq"])
+    ap.add_argument("--tag", default="base")
+    args = ap.parse_args()
+
+    overrides = {}
+    for k in ("microbatches", "moment_dtype", "master_dtype", "accum_dtype",
+              "cache_shard"):
+        v = getattr(args, k)
+        if v is not None:
+            overrides[k] = v
+    if args.skip_masked:
+        overrides["skip_masked"] = True
+    if args.tag != "base":
+        overrides["tag"] = args.tag
+
+    kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        run_all(kinds, args.out_dir, args.timeout)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mk in kinds:
+            run_cell(args.arch, args.shape, mk, overrides, args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,474 @@
+"""Loop-aware cost model over post-optimization HLO text.
+
+XLA's HloCostAnalysis counts a ``while`` body ONCE regardless of trip count
+— with scan-over-layers models that undercounts FLOPs/bytes/collectives by
+~n_layers (verified empirically; EXPERIMENTS.md §Dry-run calibration). This
+module parses the compiled module into its computation call graph and rolls
+costs up with multipliers:
+
+  while ops      x trip count (parsed from the condition computation:
+                 max integer constant, +1 when the compare is LE)
+  fusion/call    x 1 per call site (fusions are opaque for BYTE accounting —
+                 operands+result of the fusion op model post-fusion HBM
+                 traffic — but transparent for DOT flops and collectives)
+  conditional    x max over branches
+
+Per-module outputs (per-device, since SPMD executables are per-partition):
+  flops            2 * numel(result) * prod(contracted dims) per dot
+  hbm_bytes        sum over non-free ops of operand+result bytes
+  collective_bytes operand bytes of all-gather / all-reduce / reduce-scatter
+                   / all-to-all / collective-permute (+ ...-start forms)
+  breakdown        per-opcode flops and per-collective bytes
+
+This is also the §Perf profiling tool: ``dot_sites()`` lists the heaviest
+dots with their source metadata so a hillclimb iteration can see WHERE the
+flops moved.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _type_bytes(t: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(t):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(t: str) -> Optional[list[int]]:
+    m = _SHAPE_RE.search(t)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict  # name -> type string
+    ops: list[Op]
+
+
+_COMP_HEADER = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$"
+)
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^()]*\)|[\w\[\],\{\}\d]+)\s+"
+    r"([\w\-]+)\((.*)$"
+)
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "reshape", "after-all", "add-dependency", "iota",
+    "partition-id", "replica-id", "rng-get-and-update-state",
+    "get-dimension-size",
+}
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                name, params_str, _ret = m.groups()
+                params = {}
+                for p in re.findall(r"%?([\w.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                    params_str):
+                    params[p[0]] = p[1]
+                cur = Computation(name, params, [])
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            name, type_str, opcode, rest = m.groups()
+            depth, end = 1, len(rest)
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operand_str = rest[:end]
+            attrs = rest[end + 1:]
+            opnames = re.findall(r"%([\w.\-]+)", operand_str)
+            if not opnames:
+                # operands referenced without % (older dialect)
+                opnames = [
+                    t for t in re.findall(r"([\w.\-]+)", operand_str)
+                    if not re.fullmatch(r"[\d.]+", t)
+                ]
+            cur.ops.append(Op(name, type_str, opcode, opnames, attrs, line))
+    return comps
+
+
+def _trip_count(cond: Computation, comps: dict[str, Computation]) -> int:
+    consts = []
+    le = False
+    stack = [cond]
+    seen = set()
+    while stack:
+        c = stack.pop()
+        if c.name in seen:
+            continue
+        seen.add(c.name)
+        for op in c.ops:
+            if op.opcode == "constant":
+                m = re.search(r"constant\((-?\d+)\)", op.line)
+                if m:
+                    consts.append(int(m.group(1)))
+            if "direction=LE" in op.attrs or "direction=LE" in op.line:
+                le = True
+            for target in re.findall(r"(?:calls|to_apply)=%?([\w.\-]+)",
+                                     op.attrs):
+                if target in comps:
+                    stack.append(comps[target])
+    trip = max([c for c in consts if c >= 0], default=1)
+    return trip + 1 if le else max(trip, 1)
+
+
+def _dot_flops(op: Op, shape_of) -> int:
+    res_dims = _first_shape_dims(op.type_str) or []
+    numel = 1
+    for d in res_dims:
+        numel *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    k = 1
+    if m and op.operands:
+        lhs_t = shape_of(op.operands[0])
+        lhs_dims = _first_shape_dims(lhs_t) if lhs_t else None
+        if lhs_dims is not None and m.group(1):
+            for ci in m.group(1).split(","):
+                ci = int(ci)
+                if ci < len(lhs_dims):
+                    k *= lhs_dims[ci]
+    return 2 * numel * k
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    coll_breakdown: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    dot_sites: list = dataclasses.field(default_factory=list)
+    coll_sites: list = dataclasses.field(default_factory=list)
+
+    def add(self, other: "Cost", mult: float) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for kk, vv in other.coll_breakdown.items():
+            self.coll_breakdown[kk] += vv * mult
+        for (f, meta) in other.dot_sites:
+            self.dot_sites.append((f * mult, meta))
+        for (b, meta) in other.coll_sites:
+            self.coll_sites.append((b * mult, meta))
+
+
+class ModuleCost:
+    def _fusion_read_bytes(self, op: Op, called: list, shape_of) -> float:
+        """Model HBM reads of a fusion: a parameter consumed ONLY through
+        slicing ops inside the fusion contributes slice-result bytes, not the
+        whole (possibly loop-carried) buffer."""
+        total = 0.0
+        sliced_params: dict[int, float] = {}
+        for target in called:
+            comp = self.comps.get(target)
+            if comp is None:
+                continue
+            # param order == operand order
+            pnames = list(comp.params)
+            consumers: dict[str, list[Op]] = defaultdict(list)
+            for iop in comp.ops:
+                for o in iop.operands:
+                    consumers[o].append(iop)
+            for i, pn in enumerate(pnames):
+                cons = consumers.get(pn, [])
+                if cons and all(
+                    c.opcode in ("dynamic-slice", "slice", "gather")
+                    for c in cons
+                ):
+                    sliced_params[i] = sum(
+                        _type_bytes(c.type_str) for c in cons
+                    )
+        for i, o in enumerate(op.operands):
+            if i in sliced_params:
+                total += sliced_params[i]
+            else:
+                total += _type_bytes(shape_of(o) or "")
+        return total
+
+    def __init__(self, hlo: str):
+        self.comps = parse_module(hlo)
+        self.entry = None
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+        if m:
+            self.entry = m.group(1)
+        else:  # fall back: computation named main-ish
+            for name in self.comps:
+                if "main" in name:
+                    self.entry = name
+                    break
+        self._memo: dict[str, Cost] = {}
+
+    def _comp_cost(self, cname: str) -> Cost:
+        if cname in self._memo:
+            return self._memo[cname]
+        comp = self.comps[cname]
+        shapes = dict(comp.params)
+        for op in comp.ops:
+            shapes[op.name] = op.type_str
+
+        def shape_of(name: str) -> Optional[str]:
+            return shapes.get(name)
+
+        cost = Cost()
+        self._memo[cname] = cost  # cycles guard
+
+        # consumer map for the reduce-scatter-equivalence correction:
+        # XLA:CPU lacks ReduceScatterCreator, so a sharded partial-sum lowers
+        # to all-reduce + partition-id-keyed dynamic-slice. On TPU that same
+        # program is a reduce-scatter moving 1/G of the bytes. Detect the
+        # pattern and count TPU-equivalent wire bytes (raw kind kept in the
+        # 'all-reduce(cpu)' breakdown entry for transparency).
+        consumers: dict[str, list[Op]] = defaultdict(list)
+        for iop in comp.ops:
+            for o in iop.operands:
+                consumers[o].append(iop)
+
+        def _is_slice_fusion(c: Op) -> bool:
+            if "partition-id" not in c.line and not any(
+                "partition-id" in x for x in c.operands
+            ):
+                # fusion operand may be a partition-id op by name
+                ops_here = {o for o in c.operands}
+                if not any("partition-id" in o for o in ops_here):
+                    pass
+            for target in re.findall(r"calls=%?([\w.\-]+)", c.attrs):
+                tc = self.comps.get(target)
+                if tc and any(
+                    o.opcode in ("dynamic-slice",) for o in tc.ops
+                ):
+                    return True
+            return c.opcode == "dynamic-slice"
+
+        def _group_size(op: Op) -> int:
+            m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.attrs)
+            if m:
+                return max(int(m.group(2)), 1)
+            m = re.search(r"replica_groups=\{\{([\d,]+)\}", op.attrs)
+            if m:
+                return max(len(m.group(1).split(",")), 1)
+            return 1
+
+        for op in comp.ops:
+            oc = op.opcode
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in _COLLECTIVES:
+                b = sum(
+                    _type_bytes(shape_of(o) or "") for o in op.operands
+                ) or _type_bytes(op.type_str)
+                kind = base
+                if base == "all-reduce":
+                    # BFS through transitive consumers (converts/adds/-done)
+                    # looking for the partition-keyed slice that proves the
+                    # value is only ever used sharded
+                    frontier = [op.name]
+                    found = False
+                    for _ in range(4):
+                        nxt = []
+                        for nm in frontier:
+                            for c in consumers.get(nm, []):
+                                if _is_slice_fusion(c):
+                                    found = True
+                                elif c.opcode in (
+                                    "convert", "add", "multiply", "fusion",
+                                    "copy", "tuple", "get-tuple-element",
+                                ) or c.opcode.endswith("-done"):
+                                    if c.opcode == "fusion" and _is_slice_fusion(c):
+                                        found = True
+                                    nxt.append(c.name)
+                        frontier = nxt
+                        if found or not frontier:
+                            break
+                    if found:
+                        g = _group_size(op)
+                        if g > 1:
+                            cost.coll_breakdown["all-reduce(cpu-raw)"] += b
+                            b = b / g
+                            kind = "reduce-scatter"
+                cost.collective_bytes += b
+                cost.coll_breakdown[kind] += b
+                cost.hbm_bytes += b
+                meta = re.search(r'op_name="([^"]*)"', op.attrs)
+                cost.coll_sites.append(
+                    (b, kind + " " + (meta.group(1) if meta else op.name))
+                )
+                continue
+            if oc == "while":
+                body = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                if body and body.group(1) in self.comps:
+                    trip = (
+                        _trip_count(self.comps[cond.group(1)], self.comps)
+                        if cond and cond.group(1) in self.comps
+                        else 1
+                    )
+                    cost.add(self._comp_cost(body.group(1)), trip)
+                continue
+            if oc == "conditional":
+                branches = re.findall(
+                    r"(?:branch_computations=\{([^}]*)\}|"
+                    r"(?:true|false)_computation=%?([\w.\-]+))", op.attrs
+                )
+                names = []
+                for grp in branches:
+                    for g in grp:
+                        if g:
+                            names.extend(
+                                re.findall(r"%?([\w.\-]+)", g)
+                            )
+                sub = [
+                    self._comp_cost(n) for n in names if n in self.comps
+                ]
+                if sub:
+                    best = max(sub, key=lambda c: c.flops + c.hbm_bytes)
+                    cost.add(best, 1.0)
+                continue
+            if oc == "scatter":
+                # in-place: traffic ~ indices + 2x updates (read-mod-write),
+                # not the whole target buffer
+                upd = (
+                    sum(_type_bytes(shape_of(o) or "") for o in op.operands[1:])
+                    if len(op.operands) > 2 else _type_bytes(op.type_str)
+                )
+                cost.hbm_bytes += 2 * upd
+                continue
+            if oc in ("fusion", "call", "custom-call", "map", "reduce",
+                      "reduce-window", "sort", "select-and-scatter"):
+                # dots/collectives inside called computations still count
+                called = re.findall(
+                    r"(?:calls|to_apply)=%?([\w.\-]+)", op.attrs
+                )
+                for target in called:
+                    if target in self.comps:
+                        sub = self._comp_cost(target)
+                        inner = Cost()
+                        inner.flops = sub.flops
+                        inner.collective_bytes = sub.collective_bytes
+                        inner.coll_breakdown = sub.coll_breakdown
+                        inner.dot_sites = sub.dot_sites
+                        # bytes stay at the call-site level (post-fusion)
+                        cost.add(inner, 1.0)
+                if oc != "call":
+                    cost.hbm_bytes += _type_bytes(op.type_str)
+                    cost.hbm_bytes += self._fusion_read_bytes(
+                        op, called, shape_of
+                    )
+                continue
+            if oc in ("dynamic-slice", "slice", "gather"):
+                # reads only the touched slice; result-sized traffic x2
+                cost.hbm_bytes += 2 * _type_bytes(op.type_str)
+                continue
+            if oc == "dynamic-update-slice":
+                # in-place: writes the update region only
+                upd = (
+                    _type_bytes(shape_of(op.operands[1]) or "")
+                    if len(op.operands) > 1 else _type_bytes(op.type_str)
+                )
+                cost.hbm_bytes += 2 * upd
+                continue
+            if oc in ("broadcast", "iota", "copy-start", "copy-done"):
+                cost.hbm_bytes += _type_bytes(op.type_str)
+                continue
+            if oc in ("dot", "convolution"):
+                f = _dot_flops(op, shape_of)
+                cost.flops += f
+                meta = re.search(r'op_name="([^"]*)"', op.attrs)
+                cost.dot_sites.append((f, meta.group(1) if meta else op.name))
+                cost.hbm_bytes += _type_bytes(op.type_str) + sum(
+                    _type_bytes(shape_of(o) or "") for o in op.operands
+                )
+                continue
+            if oc in _FREE_OPS:
+                continue
+            # default: elementwise-ish op — count operand+result traffic
+            cost.hbm_bytes += _type_bytes(op.type_str) + sum(
+                _type_bytes(shape_of(o) or "") for o in op.operands
+            )
+        self._memo[cname] = cost
+        return cost
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        return self._comp_cost(self.entry)
+
+    def top_dots(self, n: int = 12) -> list[tuple[float, str]]:
+        agg: dict[str, float] = defaultdict(float)
+        for f, meta in self.total().dot_sites:
+            agg[meta] += f
+        return sorted(((v, k) for k, v in agg.items()), reverse=True)[:n]
+
+    def top_collectives(self, n: int = 12) -> list[tuple[float, str]]:
+        agg: dict[str, float] = defaultdict(float)
+        for b, meta in self.total().coll_sites:
+            agg[meta] += b
+        return sorted(((v, k) for k, v in agg.items()), reverse=True)[:n]
+
+
+def analyze(hlo: str) -> dict:
+    mc = ModuleCost(hlo)
+    c = mc.total()
+    return dict(
+        flops=c.flops,
+        hbm_bytes=c.hbm_bytes,
+        collective_bytes=c.collective_bytes,
+        collectives={k: v for k, v in sorted(c.coll_breakdown.items())},
+        top_dots=[(f, m) for f, m in mc.top_dots()],
+        top_collectives=[(b, m) for b, m in mc.top_collectives()],
+    )

@@ -1,0 +1,4 @@
+"""Model zoo: the assigned architecture pool as composable JAX modules."""
+from .model import LM, layer_plan
+
+__all__ = ["LM", "layer_plan"]

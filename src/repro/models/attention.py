@@ -1,0 +1,252 @@
+"""Flash attention in pure JAX with a custom VJP.
+
+Forward: online-softmax over kv blocks (scan), emitting per-row logsumexp.
+Backward: recomputes score blocks (never materializing S_q x S_kv), scanning
+kv blocks and accumulating dq into a full buffer while emitting dk/dv per
+block. Residuals saved: (q, k, v, out, lse) — O(S * d), NOT O(S^2).
+
+This is the production-critical piece for train_4k/prefill_32k memory: the
+naive scan-based online softmax keeps O(S^2 / bk) probability blocks alive
+for autodiff, which at 32k blows past HBM (measured: 143 GiB/device for a
+135M model before this — EXPERIMENTS.md §Perf).
+
+``bound_blocks(causal, skip)``: with skip=True the kv-scan for q-block i is
+python-unrolled to [0 .. ceil((i+1) bq / bk)] (and the mirrored bound in the
+backward), eliminating the ~2x causal-FLOPs waste of mask-everything
+schedules. Exposed as the beyond-paper §Perf optimization.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_for(qpos, kpos, skv_real, causal):
+    m = kpos[None, :] < skv_real
+    if causal:
+        m = m & (qpos[:, None] >= kpos[None, :])
+    else:
+        m = jnp.broadcast_to(m, (qpos.shape[0], kpos.shape[0]))
+    return m
+
+
+def _fwd_qblock(qb, kr, vr, qpos, nk_for_qi, *, bk, skv_real, causal, scale):
+    B, KV, rep, bq, hd = qb.shape
+
+    def kv_body(carry, kj):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(kr, kj * bk, bk, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(vr, kj * bk, bk, axis=2)
+        s = jax.lax.dot_general(
+            qb, kb, (((4,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        kpos = kj * bk + jnp.arange(bk)
+        mask = _mask_for(qpos, kpos, skv_real, causal)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(vb.dtype), vb, (((4,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32,
+        )
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, rep, bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, rep, bq), jnp.float32)
+    a0 = jnp.zeros((B, KV, rep, bq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        kv_body, (m0, l0, a0), jnp.arange(nk_for_qi)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF)
+    return out, lse
+
+
+def _nk_for(qi, bq, bk, nk, causal, skip):
+    if not (causal and skip):
+        return nk
+    hi = ((qi + 1) * bq + bk - 1) // bk
+    return max(1, min(nk, hi))
+
+
+def _nq_lo_for(kj, bq, bk, nq, causal, skip):
+    """First q block that sees kv block kj (mirrored bound for backward)."""
+    if not (causal and skip):
+        return 0
+    return min(nq - 1, (kj * bk) // bq)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, q_offset, bq, bk, skv_real, skip):
+    out, _res = _flash_fwd(q, k, v, causal, q_offset, bq, bk, skv_real, skip)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, q_offset, bq, bk, skv_real, skip):
+    # q: (B, KV, rep, Sq, hd); k/v: (B, KV, Skv, hd) — pre-blocked layout
+    B, KV, rep, Sq, hd = q.shape
+    Skv = k.shape[2]
+    nq, nk = Sq // bq, Skv // bk
+    scale = 1.0 / (hd ** 0.5)
+
+    def q_body(qi, nk_qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * bq, bq, axis=3)
+        qpos = q_offset + qi * bq + jnp.arange(bq)
+        return _fwd_qblock(
+            qb, k, v, qpos, nk_qi, bk=bk, skv_real=skv_real,
+            causal=causal, scale=scale,
+        )
+
+    if causal and skip:
+        outs, lses = [], []
+        for qi in range(nq):
+            o, s = q_body(qi, _nk_for(qi, bq, bk, nk, causal, skip))
+            outs.append(o)
+            lses.append(s)
+        out = jnp.concatenate(outs, axis=3)
+        lse = jnp.concatenate(lses, axis=3)
+    else:
+        _, (ob, sb) = jax.lax.scan(
+            lambda _, qi: (None, q_body(qi, nk)), None, jnp.arange(nq)
+        )
+        out = jnp.moveaxis(ob, 0, 3).reshape(B, KV, rep, Sq, hd)
+        lse = jnp.moveaxis(sb, 0, 3).reshape(B, KV, rep, Sq)
+
+    out = out.astype(q.dtype)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_offset, bq, bk, skv_real, skip, res, dout):
+    q, k, v, out, lse = res
+    B, KV, rep, Sq, hd = q.shape
+    Skv = k.shape[2]
+    nq, nk = Sq // bq, Skv // bk
+    scale = 1.0 / (hd ** 0.5)
+    do = dout.astype(jnp.float32)
+    D = jnp.sum(do * out.astype(jnp.float32), axis=-1)  # (B,KV,rep,Sq)
+
+    def q_inner(kj, kb, vb, kpos, qi, dq_acc):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * bq, bq, axis=3)
+        dob = jax.lax.dynamic_slice_in_dim(do, qi * bq, bq, axis=3)
+        lseb = jax.lax.dynamic_slice_in_dim(lse, qi * bq, bq, axis=3)
+        Db = jax.lax.dynamic_slice_in_dim(D, qi * bq, bq, axis=3)
+        qpos = q_offset + qi * bq + jnp.arange(bq)
+        s = jax.lax.dot_general(
+            qb, kb, (((4,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        mask = _mask_for(qpos, kpos, skv_real, causal)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lseb[..., None])  # (B,KV,rep,bq,bk)
+        # dv_j += p^T dO ; dp = dO v^T
+        dv_c = jax.lax.dot_general(
+            p, dob, (((3,), (3,)), ((0, 1, 2), (0, 1, 2))),
+            preferred_element_type=jnp.float32,
+        )  # (B,KV,rep,bk,hd)
+        dp = jax.lax.dot_general(
+            dob, vb.astype(jnp.float32), (((4,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32,
+        )  # (B,KV,rep,bq,bk)
+        ds = p * (dp - Db[..., None]) * scale
+        dq_b = jax.lax.dot_general(
+            ds, kb.astype(jnp.float32), (((4,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32,
+        )  # (B,KV,rep,bq,hd)
+        dk_c = jax.lax.dot_general(
+            ds, qb.astype(jnp.float32), (((3,), (3,)), ((0, 1, 2), (0, 1, 2))),
+            preferred_element_type=jnp.float32,
+        )  # (B,KV,rep,bk,hd)
+        prev = jax.lax.dynamic_slice_in_dim(dq_acc, qi * bq, bq, axis=3)
+        dq_acc = jax.lax.dynamic_update_slice_in_dim(
+            dq_acc, prev + dq_b, qi * bq, axis=3
+        )
+        return dq_acc, dk_c, dv_c
+
+    def kv_body(dq_acc, kj_static_range):
+        kj, lo = kj_static_range
+
+        kb = jax.lax.dynamic_slice_in_dim(k, kj * bk, bk, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(v, kj * bk, bk, axis=2)
+        kpos = kj * bk + jnp.arange(bk)
+
+        def scan_qi(carry, qi):
+            dq_acc, dk_j, dv_j = carry
+            dq_acc, dk_c, dv_c = q_inner(kj, kb, vb, kpos, qi, dq_acc)
+            return (dq_acc, dk_j + dk_c, dv_j + dv_c), None
+
+        dk0 = jnp.zeros((B, KV, rep, bk, hd), jnp.float32)
+        dv0 = jnp.zeros((B, KV, rep, bk, hd), jnp.float32)
+        (dq_acc, dk_j, dv_j), _ = jax.lax.scan(
+            scan_qi, (dq_acc, dk0, dv0), jnp.arange(lo, nq)
+        )
+        return dq_acc, (dk_j, dv_j)
+
+    dq = jnp.zeros((B, KV, rep, Sq, hd), jnp.float32)
+    if causal and skip:
+        dks, dvs = [], []
+        for kj in range(nk):
+            lo = _nq_lo_for(kj, bq, bk, nq, causal, skip)
+            dq, (dk_j, dv_j) = kv_body(dq, (kj, lo))
+            dks.append(dk_j)
+            dvs.append(dv_j)
+        dk_all = jnp.stack(dks)  # (nk, B,KV,rep,bk,hd)
+        dv_all = jnp.stack(dvs)
+    else:
+        def scan_kj(dq_acc, kj):
+            dq_acc, (dk_j, dv_j) = kv_body(dq_acc, (kj, 0))
+            return dq_acc, (dk_j, dv_j)
+
+        dq, (dk_all, dv_all) = jax.lax.scan(
+            scan_kj, dq, jnp.arange(nk)
+        )
+
+    # (nk, B, KV, rep, bk, hd) -> sum rep -> (B, KV, Skv, hd)
+    dk = jnp.moveaxis(dk_all.sum(axis=3), 0, 2).reshape(B, KV, Skv, hd)
+    dv = jnp.moveaxis(dv_all.sum(axis=3), 0, 2).reshape(B, KV, Skv, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, KV, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+    skip_masked_blocks: bool = False,
+) -> jnp.ndarray:
+    B, Sq0, H, hd = q.shape
+    _, Skv0, KV, _ = k.shape
+    rep = H // KV
+    bq = min(q_block, Sq0)
+    bk = min(kv_block, Skv0)
+    pq = -Sq0 % bq
+    pkv = -Skv0 % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    Sq = Sq0 + pq
+    qr = q.reshape(B, Sq, KV, rep, hd).transpose(0, 2, 3, 1, 4)
+    kr = k.transpose(0, 2, 1, 3)
+    vr = v.transpose(0, 2, 1, 3)
+    out = _flash(
+        qr, kr, vr, causal, q_offset, bq, bk, Skv0, skip_masked_blocks
+    )
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out[:, :Sq0]

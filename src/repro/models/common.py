@@ -1,0 +1,242 @@
+"""Shared transformer building blocks: RMSNorm, RoPE, GQA attention
+(blockwise online-softmax for long sequences), SwiGLU/GELU MLPs.
+
+All matmul-heavy paths accumulate in f32 (preferred_element_type) and keep
+activations in the config dtype (bf16 by default).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32. Rotates in f32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+def _block_scores(q, k, scale):
+    # q: (B, KV, rep, bq, hd), k: (B, KV, bk, hd) -> (B, KV, rep, bq, bk)
+    return jax.lax.dot_general(
+        q, k,
+        (((4,), (3,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32,
+    ) * scale
+
+
+def blockwise_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, KV, hd)
+    v: jnp.ndarray,  # (B, Skv, KV, hd)
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+    skip_masked_blocks: bool = False,
+) -> jnp.ndarray:
+    """Flash attention (custom-VJP; O(S*d) residuals). See attention.py."""
+    from .attention import flash_attention
+
+    return flash_attention(
+        q, k, v, causal=causal, q_offset=q_offset, q_block=q_block,
+        kv_block=kv_block, skip_masked_blocks=skip_masked_blocks,
+    )
+
+
+def blockwise_attention_ref(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, KV, hd)
+    v: jnp.ndarray,  # (B, Skv, KV, hd)
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+    skip_masked_blocks: bool = False,
+) -> jnp.ndarray:
+    """Reference online-softmax blockwise attention (plain autodiff).
+
+    Numerically identical to blockwise_attention but keeps O(S^2/bk)
+    residuals under autodiff — used only as the test oracle.
+    """
+    B, Sq0, H, hd = q.shape
+    _, Skv0, KV, _ = k.shape
+    rep = H // KV
+    scale = 1.0 / (hd ** 0.5)
+    bq = min(q_block, Sq0)
+    bk = min(kv_block, Skv0)
+    # pad sequences to block multiples; padded kv positions are masked out
+    pq = -Sq0 % bq
+    pkv = -Skv0 % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    Sq, Skv = Sq0 + pq, Skv0 + pkv
+    nq, nk = Sq // bq, Skv // bk
+
+    qr = q.reshape(B, Sq, KV, rep, hd).transpose(0, 2, 3, 1, 4)  # B,KV,rep,Sq,hd
+    kr = k.transpose(0, 2, 1, 3)  # B,KV,Skv,hd
+    vr = v.transpose(0, 2, 1, 3)
+
+    def kv_body(carry, kj, qb, qpos):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(kr, kj * bk, bk, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(vr, kj * bk, bk, axis=2)
+        s = _block_scores(qb, kb, scale)  # (B,KV,rep,bq,bk) f32
+        kpos = kj * bk + jnp.arange(bk)
+        mask = kpos[None, :] < Skv0  # kv padding
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        else:
+            mask = jnp.broadcast_to(mask, (bq, bk))
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(vb.dtype), vb,
+            (((4,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32,
+        )  # (B,KV,rep,bq,hd)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    def q_body(qi, nk_for_qi):
+        qb = jax.lax.dynamic_slice_in_dim(qr, qi * bq, bq, axis=3)
+        qpos = q_offset + qi * bq + jnp.arange(bq)
+        m0 = jnp.full((B, KV, rep, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, rep, bq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, kj: kv_body(c, kj, qb, qpos),
+            (m0, l0, a0),
+            jnp.arange(nk_for_qi),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B,KV,rep,bq,hd)
+
+    if skip_masked_blocks and causal and q_offset == 0 and Sq == Skv:
+        # optimized: q-block i only visits kv blocks [0 .. i*bq//bk]
+        outs = []
+        for qi in range(nq):
+            hi = min(nk, (qi + 1) * bq // bk + (1 if ((qi + 1) * bq) % bk else 0))
+            outs.append(q_body(qi, max(hi, 1)))
+        out = jnp.concatenate(outs, axis=3)
+    else:
+        def scan_q(_, qi):
+            return None, q_body(qi, nk)
+
+        _, out_blocks = jax.lax.scan(scan_q, None, jnp.arange(nq))
+        # (nq, B, KV, rep, bq, hd) -> (B, KV, rep, Sq, hd)
+        out = jnp.moveaxis(out_blocks, 0, 3).reshape(B, KV, rep, Sq, hd)
+
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out[:, :Sq0].astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, S, KV, hd)
+    v_cache: jnp.ndarray,  # (B, S, KV, hd)
+    pos: jnp.ndarray,  # scalar int32: current position (attend to <= pos)
+) -> jnp.ndarray:
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    rep = H // KV
+    scale = 1.0 / (hd ** 0.5)
+    qr = q.reshape(B, KV, rep, hd)
+    s = jnp.einsum(
+        "bgrh,bsgh->bgrs", qr.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    ) * scale
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrs,bsgh->bgrh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def mlp_apply(x: jnp.ndarray, p: dict, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        gate = x @ p["w_gate"]
+        up = x @ p["w_in"]
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+        return h @ p["w_out"]
+    if kind == "gelu":
+        h = jax.nn.gelu((x @ p["w_in"]).astype(jnp.float32)).astype(x.dtype)
+        return h @ p["w_out"]
+    raise ValueError(kind)
+
+
+def mlp_init(rng, d: int, f: int, kind: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = (2.0 / d) ** 0.5
+    s_out = (2.0 / f) ** 0.5
+    p = {
+        "w_in": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (f, d)) * s_out).astype(dtype),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (d, f)) * s_in).astype(dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# attention parameter block
+# --------------------------------------------------------------------------
+
+
+def attn_init(rng, d: int, n_heads: int, n_kv: int, head_dim: int, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s = (1.0 / d) ** 0.5
+    return {
+        "wq": (jax.random.normal(k1, (d, n_heads * head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, n_kv * head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, n_kv * head_dim)) * s).astype(dtype),
+        "wo": (
+            jax.random.normal(k4, (n_heads * head_dim, d)) * s
+        ).astype(dtype),
+    }
+
+
+def attn_qkv(x: jnp.ndarray, p: dict, n_heads: int, n_kv: int, head_dim: int):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(B, S, n_kv, head_dim)
+    v = (x @ p["wv"]).reshape(B, S, n_kv, head_dim)
+    return q, k, v

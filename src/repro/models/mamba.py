@@ -1,0 +1,198 @@
+"""Mamba2 block (state-space duality, arXiv:2405.21060) in chunked matmul
+form — the TPU-native phrasing (intra-chunk work is MXU matmuls; the
+inter-chunk recurrence is a tiny scan over (H, P, N) states).
+
+The per-(chunk, head) intra-chunk math is exactly kernels/ssd.py's Pallas
+kernel; this module uses broadcast-friendly einsums (ngroups=1 shares B/C
+across heads without materializing per-head copies) and is tied to the
+kernel + recurrent oracle by tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import rms_norm
+from .sharding import constrain
+
+
+def mamba_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    return d_inner, H, cfg.ssm_state
+
+
+def mamba_init(rng, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, H, N = mamba_dims(cfg)
+    conv_ch = d_inner + 2 * N
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    proj_out = 2 * d_inner + 2 * N + H  # z, x, B, C, dt
+    s = (1.0 / d) ** 0.5
+    return {
+        "in_proj": (jax.random.normal(k1, (d, proj_out)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.d_conv, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(k3, (H,), jnp.float32, 1.0, 16.0)
+        ),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.exp(jax.random.uniform(k4, (H,), jnp.float32, 1e-3, 0.1)) - 1.0
+        ),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": (
+            jax.random.normal(k5, (d_inner, d)) * (1.0 / d_inner) ** 0.5
+        ).astype(dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal conv. x: (B, S, C), w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(
+        pad[:, j : j + x.shape[1], :] * w[j][None, None, :] for j in range(K)
+    )
+    return y + b[None, None, :]
+
+
+def ssd_chunked(
+    xbar: jnp.ndarray,  # (B, S, H, P) dt-scaled inputs
+    loga: jnp.ndarray,  # (B, S, H) log decays (<= 0)
+    Bm: jnp.ndarray,  # (B, S, N)
+    Cm: jnp.ndarray,  # (B, S, N)
+    chunk: int,
+    s0: jnp.ndarray | None = None,  # (B, H, P, N)
+):
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = xbar.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc, Q = S // chunk, chunk
+    f32 = jnp.float32
+
+    xb = xbar.reshape(Bsz, nc, Q, H, P).astype(f32)
+    la = loga.reshape(Bsz, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(f32)
+
+    cum = jnp.cumsum(la, axis=2)  # (B,nc,Q,H)
+    cumT = cum.transpose(0, 1, 3, 2)  # (B,nc,H,Q)
+    diff = cumT[..., :, None] - cumT[..., None, :]  # (B,nc,H,Q,Q)
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tril, jnp.exp(diff), 0.0)
+    G = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)  # (B,nc,Q,Q)
+    M = G[:, :, None] * L  # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchts,bcshp->bcthp", M, xb)
+
+    decay_end = jnp.exp(cumT[..., -1:] - cumT)  # (B,nc,H,Q)
+    states = jnp.einsum("bcsn,bchs,bcshp->bchpn", Bc, decay_end, xb)
+    total = jnp.exp(cumT[..., -1])  # (B,nc,H)
+
+    if s0 is None:
+        s0 = jnp.zeros((Bsz, H, P, N), f32)
+
+    def step(s, inp):
+        st_c, tot_c = inp  # (B,H,P,N), (B,H)
+        s_next = s * tot_c[:, :, None, None] + st_c
+        return s_next, s  # emit state *entering* the chunk
+
+    s_fin, s_prev = jax.lax.scan(
+        step,
+        s0.astype(f32),
+        (states.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    decay_start = jnp.exp(cumT)  # (B,nc,H,Q)
+    y_off = jnp.einsum("bctn,bchpn,bcht->bcthp", Cc, s_prev, decay_start)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(xbar.dtype), s_fin
+
+
+def _split_proj(zxbcdt, d_inner, N, H):
+    z = zxbcdt[..., :d_inner]
+    xc = zxbcdt[..., d_inner : 2 * d_inner]
+    Bc = zxbcdt[..., 2 * d_inner : 2 * d_inner + N]
+    Cc = zxbcdt[..., 2 * d_inner + N : 2 * d_inner + 2 * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * N :]
+    return z, xc, Bc, Cc, dt
+
+
+def mamba_apply(
+    x: jnp.ndarray,  # (B, S, d)
+    p: dict,
+    cfg,
+    *,
+    chunk: int = 256,
+    want_cache: bool = False,
+):
+    """Full-sequence Mamba2 block. Returns (y, cache | None).
+
+    cache = (ssm_state (B,H,P,N) f32, conv_cache (B, d_conv-1, conv_ch)).
+    """
+    B, S, d = x.shape
+    d_inner, H, N = mamba_dims(cfg)
+    P = cfg.ssm_head_dim
+    zxbcdt = constrain(x @ p["in_proj"], ("dp", None, "tp"))
+    z, xc, Bc, Cc, dt = _split_proj(zxbcdt, d_inner, N, H)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_out = jax.nn.silu(
+        _causal_conv(conv_in, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    xc = conv_out[..., :d_inner]
+    Bc = conv_out[..., d_inner : d_inner + N]
+    Cc = conv_out[..., d_inner + N :]
+
+    xh = constrain(xc.reshape(B, S, H, P), ("dp", None, "tp", None))
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    loga = -jnp.exp(p["A_log"])[None, None] * dtf
+    xbar = xh.astype(jnp.float32) * dtf[..., None]
+
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    y, s_fin = ssd_chunked(xbar, loga, Bc, Cc, c)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = constrain(y.reshape(B, S, d_inner), ("dp", None, "tp"))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["norm"])
+    out = y @ p["out_proj"]
+    if not want_cache:
+        return out, None
+    conv_cache = conv_in[:, S - (cfg.d_conv - 1) :, :]
+    return out, (s_fin, conv_cache)
+
+
+def mamba_decode(
+    x: jnp.ndarray,  # (B, 1, d)
+    p: dict,
+    cfg,
+    cache,  # (ssm_state (B,H,P,N), conv_cache (B, d_conv-1, conv_ch))
+):
+    B, _, d = x.shape
+    d_inner, H, N = mamba_dims(cfg)
+    P = cfg.ssm_head_dim
+    ssm, conv_cache = cache
+    zxbcdt = x @ p["in_proj"]
+    z, xc, Bc, Cc, dt = _split_proj(zxbcdt[:, 0], d_inner, N, H)
+    conv_new = jnp.concatenate([xc, Bc, Cc], axis=-1)  # (B, conv_ch)
+    win = jnp.concatenate([conv_cache, conv_new[:, None]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xc = conv_out[..., :d_inner]
+    Bc = conv_out[..., d_inner : d_inner + N].astype(jnp.float32)
+    Cc = conv_out[..., d_inner + N :].astype(jnp.float32)
+
+    xh = xc.reshape(B, H, P).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(p["A_log"])[None] * dtf)  # (B,H)
+    xbar = xh * dtf[..., None]
+    ssm = ssm * a[..., None, None] + xbar[..., None] * Bc[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", ssm, Cc) + p["D"][None, :, None] * xh
+    y = y.reshape(B, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["norm"])
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, (ssm, win[:, 1:])

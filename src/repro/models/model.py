@@ -1,0 +1,598 @@
+"""LM assembly for every assigned architecture family.
+
+A model is a sequence of *segments*; each segment is ``count`` identical
+blocks whose parameters are stacked on a leading axis and applied with
+``lax.scan`` (+ per-block remat in training) so the HLO stays compact even
+for 100-layer configs — essential for the 512-device dry-run compiles.
+
+Families -> layer plans:
+  dense/audio   [("dense", L)]
+  moe           [("moe", L)] or [("moe_pair", L/2)] (interleaved, llama4)
+  ssm           [("mamba", L)]
+  hybrid        [("zamba_super", L//e), ("mamba", L%e)]   e = shared_attn_every
+                (each super = e mamba blocks + ONE shared attn block whose
+                 single weight set is closed over, zamba2-style)
+  vlm           [("vlm_super", L//e)]                      e = cross_attn_every
+                (each super = e-1 self-attn blocks + 1 cross-attn block
+                 attending to stub image embeddings)
+
+Three entry points per model: ``forward`` (train / prefill — prefill also
+emits KV/SSM caches), ``decode_step`` (single token against caches), and
+``loss`` (next-token CE + MoE aux).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import (
+    attn_init,
+    attn_qkv,
+    blockwise_attention,
+    decode_attention,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    rope,
+)
+from .sharding import constrain
+from .mamba import mamba_apply, mamba_decode, mamba_dims, mamba_init
+from .moe import moe_apply, moe_init
+
+Params = Any
+Cache = Any
+
+
+def layer_plan(cfg: ArchConfig) -> list[tuple[str, int]]:
+    if cfg.family in ("dense", "audio"):
+        return [("dense", cfg.n_layers)]
+    if cfg.family == "moe":
+        if cfg.moe_every == 1:
+            return [("moe", cfg.n_layers)]
+        assert cfg.moe_every == 2, cfg.moe_every
+        return [("moe_pair", cfg.n_layers // 2)]
+    if cfg.family == "ssm":
+        return [("mamba", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        e = cfg.shared_attn_every
+        supers, tail = divmod(cfg.n_layers, e)
+        plan: list[tuple[str, int]] = [("zamba_super", supers)]
+        if tail:
+            plan.append(("mamba", tail))
+        return plan
+    if cfg.family == "vlm":
+        e = cfg.cross_attn_every
+        assert cfg.n_layers % e == 0
+        return [("vlm_super", cfg.n_layers // e)]
+    raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------------
+# sub-layer init
+# --------------------------------------------------------------------------
+
+
+def _dense_block_init(rng, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+    }
+
+
+def _moe_block_init(rng, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "moe": moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts, dtype),
+    }
+
+
+def _mamba_block_init(rng, cfg: ArchConfig, dtype):
+    return {
+        "ln": jnp.ones((cfg.d_model,), dtype),
+        "mamba": mamba_init(rng, cfg, dtype),
+    }
+
+
+def block_init(kind: str, rng, cfg: ArchConfig, dtype):
+    if kind == "dense":
+        return _dense_block_init(rng, cfg, dtype)
+    if kind == "moe":
+        return _moe_block_init(rng, cfg, dtype)
+    if kind == "moe_pair":
+        k1, k2 = jax.random.split(rng)
+        return {
+            "dense": _dense_block_init(k1, cfg, dtype),
+            "moe": _moe_block_init(k2, cfg, dtype),
+        }
+    if kind == "mamba":
+        return _mamba_block_init(rng, cfg, dtype)
+    if kind == "zamba_super":
+        ks = jax.random.split(rng, cfg.shared_attn_every)
+        return {
+            "mamba": jax.vmap(
+                lambda r: _mamba_block_init(r, cfg, dtype)
+            )(ks),
+        }
+    if kind == "vlm_super":
+        e = cfg.cross_attn_every
+        ks = jax.random.split(rng, e)
+        return {
+            "dense": jax.vmap(
+                lambda r: _dense_block_init(r, cfg, dtype)
+            )(ks[: e - 1]),
+            "cross": _dense_block_init(ks[e - 1], cfg, dtype),
+        }
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# sub-layer apply (full-sequence: train & prefill)
+# --------------------------------------------------------------------------
+
+
+def _self_attn_full(p, x, positions, cfg: ArchConfig, want_cache, skip_masked):
+    h = rms_norm(x, p["ln1"])
+    q, k, v = attn_qkv(h, p["attn"], cfg.n_heads, cfg.n_kv, cfg.hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    cache = (k, v) if want_cache else None
+    # expand GQA KV to full heads for the sequence path: k/v then shard over
+    # TP exactly like q (the emitted cache stays GQA-compact). Costs a rep-x
+    # larger k/v activation, consumed blockwise by flash attention.
+    rep = cfg.n_heads // cfg.n_kv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    q = constrain(q, ("dp", None, "tp", None))
+    k = constrain(k, ("dp", None, "tp", None))
+    v = constrain(v, ("dp", None, "tp", None))
+    o = blockwise_attention(
+        q, k, v, causal=True,
+        q_block=cfg.q_block, kv_block=cfg.kv_block,
+        skip_masked_blocks=skip_masked,
+    )
+    o = constrain(o, ("dp", None, "tp", None))
+    B, S = x.shape[:2]
+    x = x + o.reshape(B, S, -1) @ p["attn"]["wo"]
+    return constrain(x, ("dp", None, None)), cache
+
+
+def _cross_attn_full(p, x, img, cfg: ArchConfig, want_cache):
+    h = rms_norm(x, p["ln1"])
+    B, S, _ = x.shape
+    q = (h @ p["attn"]["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    ni = img.shape[1]
+    k = (img @ p["attn"]["wk"]).reshape(B, ni, cfg.n_kv, cfg.hd)
+    v = (img @ p["attn"]["wv"]).reshape(B, ni, cfg.n_kv, cfg.hd)
+    cache = (k, v) if want_cache else None
+    rep = cfg.n_heads // cfg.n_kv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    q = constrain(q, ("dp", None, "tp", None))
+    k = constrain(k, ("dp", None, "tp", None))
+    v = constrain(v, ("dp", None, "tp", None))
+    o = blockwise_attention(
+        q, k, v, causal=False, q_block=cfg.q_block, kv_block=cfg.kv_block
+    )
+    o = constrain(o, ("dp", None, "tp", None))
+    x = x + o.reshape(B, S, -1) @ p["attn"]["wo"]
+    return constrain(x, ("dp", None, None)), cache
+
+
+def _mlp_sub(p, x, cfg: ArchConfig):
+    return x + mlp_apply(rms_norm(x, p["ln2"]), p["mlp"], cfg.mlp)
+
+
+def _moe_sub(p, x, cfg: ArchConfig):
+    y, aux = moe_apply(
+        rms_norm(x, p["ln2"]), p["moe"],
+        top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+    )
+    return x + y, aux
+
+
+def block_apply_full(
+    kind, p, x, ctx, *, want_cache: bool
+) -> tuple[jnp.ndarray, jnp.ndarray, Cache]:
+    """Returns (x, aux, cache). ctx: dict(positions, img, shared, cfg, ...)."""
+    cfg: ArchConfig = ctx["cfg"]
+    zero = jnp.zeros((), jnp.float32)
+    if kind == "dense":
+        x, cache = _self_attn_full(
+            p, x, ctx["positions"], cfg, want_cache, ctx["skip_masked"]
+        )
+        x = _mlp_sub(p, x, cfg)
+        return x, zero, cache
+    if kind == "moe":
+        x, cache = _self_attn_full(
+            p, x, ctx["positions"], cfg, want_cache, ctx["skip_masked"]
+        )
+        x, aux = _moe_sub(p, x, cfg)
+        return x, aux, cache
+    if kind == "moe_pair":
+        x, aux1, c1 = block_apply_full(
+            "dense", p["dense"], x, ctx, want_cache=want_cache
+        )
+        x, aux2, c2 = block_apply_full(
+            "moe", p["moe"], x, ctx, want_cache=want_cache
+        )
+        return x, aux1 + aux2, {"dense": c1, "moe": c2}
+    if kind == "mamba":
+        h = rms_norm(x, p["ln"])
+        y, cache = mamba_apply(
+            h, p["mamba"], cfg, chunk=cfg.ssd_chunk, want_cache=want_cache
+        )
+        return x + y, zero, cache
+    if kind == "zamba_super":
+        def inner(xc, pl):
+            xc, _, cache = block_apply_full(
+                "mamba", pl, xc, ctx, want_cache=want_cache
+            )
+            return xc, cache
+        x, mcaches = jax.lax.scan(inner, x, p["mamba"])
+        x, _, acache = block_apply_full(
+            "dense", ctx["shared"], x, ctx, want_cache=want_cache
+        )
+        return x, zero, {"mamba": mcaches, "attn": acache}
+    if kind == "vlm_super":
+        def inner(xc, pl):
+            xc, _, cache = block_apply_full(
+                "dense", pl, xc, ctx, want_cache=want_cache
+            )
+            return xc, cache
+        x, dcaches = jax.lax.scan(inner, x, p["dense"])
+        x, ccache = _cross_attn_full(
+            p["cross"], x, ctx["img"], cfg, want_cache
+        )
+        x = _mlp_sub(p["cross"], x, cfg)
+        return x, zero, {"dense": dcaches, "cross": ccache}
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# sub-layer apply (single-token decode against caches)
+# --------------------------------------------------------------------------
+
+
+def _self_attn_decode(p, x, pos, cache, cfg: ArchConfig):
+    kc, vc = cache
+    h = rms_norm(x, p["ln1"])
+    q, k, v = attn_qkv(h, p["attn"], cfg.n_heads, cfg.n_kv, cfg.hd)
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+    o = decode_attention(q, kc, vc, pos)
+    x = x + o.reshape(B, 1, -1) @ p["attn"]["wo"]
+    return x, (kc, vc)
+
+
+def _cross_attn_decode(p, x, cache, cfg: ArchConfig):
+    kc, vc = cache  # static image KV from prefill
+    h = rms_norm(x, p["ln1"])
+    B = x.shape[0]
+    q = (h @ p["attn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+    o = decode_attention(q, kc, vc, jnp.int32(kc.shape[1] - 1))
+    x = x + o.reshape(B, 1, -1) @ p["attn"]["wo"]
+    return x, (kc, vc)
+
+
+def block_apply_decode(kind, p, x, cache, ctx):
+    cfg: ArchConfig = ctx["cfg"]
+    pos = ctx["pos"]
+    if kind == "dense":
+        x, cache = _self_attn_decode(p, x, pos, cache, cfg)
+        x = _mlp_sub(p, x, cfg)
+        return x, cache
+    if kind == "moe":
+        x, cache = _self_attn_decode(p, x, pos, cache, cfg)
+        x, _aux = _moe_sub(p, x, cfg)
+        return x, cache
+    if kind == "moe_pair":
+        x, c1 = block_apply_decode("dense", p["dense"], x, cache["dense"], ctx)
+        x, c2 = block_apply_decode("moe", p["moe"], x, cache["moe"], ctx)
+        return x, {"dense": c1, "moe": c2}
+    if kind == "mamba":
+        h = rms_norm(x, p["ln"])
+        y, cache = mamba_decode(h, p["mamba"], cfg, cache)
+        return x + y, cache
+    if kind == "zamba_super":
+        def inner(xc, inp):
+            pl, cl = inp
+            xc, cl = block_apply_decode("mamba", pl, xc, cl, ctx)
+            return xc, cl
+        x, mcaches = jax.lax.scan(inner, x, (p["mamba"], cache["mamba"]))
+        x, acache = block_apply_decode(
+            "dense", ctx["shared"], x, cache["attn"], ctx
+        )
+        return x, {"mamba": mcaches, "attn": acache}
+    if kind == "vlm_super":
+        def inner(xc, inp):
+            pl, cl = inp
+            xc, cl = block_apply_decode("dense", pl, xc, cl, ctx)
+            return xc, cl
+        x, dcaches = jax.lax.scan(inner, x, (p["dense"], cache["dense"]))
+        x, ccache = _cross_attn_decode(p["cross"], x, cache["cross"], cfg)
+        x = _mlp_sub(p["cross"], x, cfg)
+        return x, {"dense": dcaches, "cross": ccache}
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# the model
+# --------------------------------------------------------------------------
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.plan = layer_plan(cfg)
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ---- parameters ----
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(rng, len(self.plan) + 3)
+        vp = cfg.vocab_padded
+        params: dict = {
+            "embed": (
+                jax.random.normal(keys[0], (vp, cfg.d_model)) * 0.02
+            ).astype(self.dtype),
+            "final_norm": jnp.ones((cfg.d_model,), self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(keys[1], (cfg.d_model, vp)) * 0.02
+            ).astype(self.dtype)
+        if cfg.family == "hybrid":
+            params["shared"] = _dense_block_init(keys[2], cfg, self.dtype)
+        for si, (kind, count) in enumerate(self.plan):
+            ks = jax.random.split(keys[3 + si], count)
+            params[f"seg{si}"] = jax.vmap(
+                lambda r: block_init(kind, r, cfg, self.dtype)
+            )(ks)
+        return params
+
+    def abstract_params(self, seed: int = 0) -> Params:
+        return jax.eval_shape(
+            lambda: self.init(jax.random.PRNGKey(seed))
+        )
+
+    # ---- forward (train / prefill) ----
+
+    def _ctx(self, positions, img, params, skip_masked):
+        return dict(
+            cfg=self.cfg,
+            positions=positions,
+            img=img,
+            shared=params.get("shared"),
+            skip_masked=skip_masked,
+        )
+
+    def forward(
+        self,
+        params: Params,
+        tokens: jnp.ndarray,  # (B, S) int32
+        img: Optional[jnp.ndarray] = None,  # (B, n_img, d) stub embeddings
+        *,
+        want_caches: bool = False,
+        remat: bool = True,
+        skip_masked: bool = False,
+    ):
+        """Returns (logits (B,S,V), aux scalar, caches list | None)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = constrain(x, ("dp", None, None))
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        ctx = self._ctx(positions, img, params, skip_masked)
+
+        caches = []
+        aux_total = jnp.zeros((), jnp.float32)
+        for si, (kind, _count) in enumerate(self.plan):
+            def body(xc, pl, _kind=kind):
+                xn, aux, cache = block_apply_full(
+                    _kind, pl, xc, ctx, want_cache=want_caches
+                )
+                return xn, (aux, cache)
+
+            if remat and not want_caches:
+                body = jax.checkpoint(body)
+            x, (auxs, cache) = jax.lax.scan(body, x, params[f"seg{si}"])
+            aux_total = aux_total + jnp.sum(auxs)
+            caches.append(cache)
+
+        x = rms_norm(x, params["final_norm"])
+        if want_caches:
+            # prefill only needs next-token logits: never materialize (B,S,V)
+            x = x[:, -1:]
+        head = (
+            params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        )
+        logits = x @ head
+        return logits, aux_total, (caches if want_caches else None)
+
+    # ---- losses ----
+
+    def loss(self, params, tokens, img=None, *, remat=True, skip_masked=False):
+        logits, aux, _ = self.forward(
+            params, tokens, img, remat=remat, skip_masked=skip_masked
+        )
+        tgt = tokens[:, 1:]
+        lg = logits[:, :-1]
+        # shard-local CE: the gold logit is picked with a vocab-mask reduce
+        # (stays sharded over the vocab/tp axis; a gather here all-gathers
+        # the full logits — §Perf iteration 2), logsumexp reduces with f32
+        # accumulation without materializing an f32 copy of the logits.
+        vocab_ids = jnp.arange(lg.shape[-1], dtype=tgt.dtype)
+        onehot = vocab_ids[None, None, :] == tgt[..., None]
+        gold = jnp.sum(
+            jnp.where(onehot, lg, 0).astype(jnp.float32), axis=-1
+        )
+        m = jnp.max(lg, axis=-1).astype(jnp.float32)
+        logz = m + jnp.log(
+            jnp.sum(
+                jnp.exp(lg.astype(jnp.float32) - m[..., None]), axis=-1
+            )
+        )
+        ce = jnp.mean(logz - gold)
+        return ce + 0.01 * aux, dict(ce=ce, aux=aux)
+
+    # ---- serving ----
+
+    def prefill(self, params, tokens, img=None):
+        logits, _aux, caches = self.forward(
+            params, tokens, img, want_caches=True, remat=False
+        )
+        return logits[:, -1], caches
+
+    def decode_step(self, params, token, caches, pos, img=None):
+        """token: (B, 1) int32; pos: scalar int32 (write position).
+
+        Returns (logits (B, V), new caches).
+        """
+        cfg = self.cfg
+        B = token.shape[0]
+        x = jnp.take(params["embed"], token, axis=0)
+        ctx = self._ctx(None, img, params, False)
+        ctx["pos"] = pos
+
+        new_caches = []
+        for si, (kind, count) in enumerate(self.plan):
+            pstack = params[f"seg{si}"]
+
+            # fori_loop with in-place dynamic updates on the cache carry:
+            # a scan emitting updated caches as ys would double-buffer the
+            # whole KV stack (measured ~2.5x cache in temps — §Perf it. 4)
+            def body(i, carry, _kind=kind, _pstack=pstack):
+                xc, cache = carry
+                pl = jax.tree.map(
+                    lambda s: jax.lax.dynamic_index_in_dim(
+                        s, i, 0, keepdims=False
+                    ),
+                    _pstack,
+                )
+                cl = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(
+                        c, i, 0, keepdims=False
+                    ),
+                    cache,
+                )
+                xn, cl_new = block_apply_decode(_kind, pl, xc, cl, ctx)
+                cache = jax.tree.map(
+                    lambda c, u: jax.lax.dynamic_update_index_in_dim(
+                        c, u.astype(c.dtype), i, 0
+                    ),
+                    cache,
+                    cl_new,
+                )
+                return (xn, cache)
+
+            x, cache = jax.lax.fori_loop(0, count, body, (x, caches[si]))
+            new_caches.append(cache)
+
+        x = rms_norm(x, params["final_norm"])
+        head = (
+            params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        )
+        logits = (x @ head)[:, 0]
+        return logits, new_caches
+
+    # ---- cache allocation (decode dry-run entry) ----
+
+    def init_caches(self, batch: int, seq_len: int) -> list:
+        """Abstract-friendly cache pytree for a cache of ``seq_len``."""
+        cfg = self.cfg
+        d_inner, H, N = (
+            mamba_dims(cfg) if cfg.ssm_state else (0, 0, 0)
+        )
+        P = cfg.ssm_head_dim
+        conv_ch = d_inner + 2 * N
+
+        def attn_cache(count_shape):
+            shp = (*count_shape, batch, seq_len, cfg.n_kv, cfg.hd)
+            return (
+                jnp.zeros(shp, self.dtype),
+                jnp.zeros(shp, self.dtype),
+            )
+
+        def mamba_cache(count_shape):
+            return (
+                jnp.zeros((*count_shape, batch, H, P, N), jnp.float32),
+                jnp.zeros(
+                    (*count_shape, batch, cfg.d_conv - 1, conv_ch), self.dtype
+                ),
+            )
+
+        caches = []
+        for kind, count in self.plan:
+            if kind in ("dense", "moe"):
+                caches.append(attn_cache((count,)))
+            elif kind == "moe_pair":
+                caches.append(
+                    {"dense": attn_cache((count,)), "moe": attn_cache((count,))}
+                )
+            elif kind == "mamba":
+                caches.append(mamba_cache((count,)))
+            elif kind == "zamba_super":
+                caches.append(
+                    {
+                        "mamba": mamba_cache((count, cfg.shared_attn_every)),
+                        "attn": attn_cache((count,)),
+                    }
+                )
+            elif kind == "vlm_super":
+                e = cfg.cross_attn_every
+                caches.append(
+                    {
+                        "dense": attn_cache((count, e - 1)),
+                        "cross": (
+                            jnp.zeros(
+                                (count, batch, cfg.n_img_tokens, cfg.n_kv, cfg.hd),
+                                self.dtype,
+                            ),
+                            jnp.zeros(
+                                (count, batch, cfg.n_img_tokens, cfg.n_kv, cfg.hd),
+                                self.dtype,
+                            ),
+                        ),
+                    }
+                )
+            else:
+                raise ValueError(kind)
+        return caches
+
+    def param_count(self) -> int:
+        import math
+
+        shapes = jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+        return sum(
+            math.prod(l.shape)
+            for l in jax.tree_util.tree_leaves(shapes)
+        )
+
+    def active_param_count(self) -> int:
+        """MoE: parameters touched per token (6*N_active*D accounting)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if not cfg.n_experts:
+            return total
+        # subtract inactive experts' FFN params
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        n_moe_layers = cfg.n_layers // cfg.moe_every
+        inactive = (cfg.n_experts - cfg.top_k) * per_expert * n_moe_layers
+        return total - inactive

@@ -1,0 +1,197 @@
+"""PartitionSpec rules: FSDP over the data axes x TP/EP over the model axis.
+
+Parameters are *fully sharded*: every matmul weight has one dim on the
+model axis (tensor/expert parallel) and one on the data axes (ZeRO-3-style
+storage sharding — GSPMD inserts the just-in-time all-gathers). Optimizer
+state inherits the param specs. Activations shard batch over the data axes;
+long KV caches shard the *sequence* dim over the model axis (decode
+attention's softmax reductions over the sharded axis become the collective
+term in the roofline — see EXPERIMENTS.md).
+
+``fsdp``: tuple of mesh axis names for data parallelism, e.g. ("data",) or
+("pod", "data"). ``tp``: the model axis name.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+FSDP = ("data",)
+TP = "model"
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints
+#
+# GSPMD does not reliably propagate batch/head shardings *into* scan bodies
+# (measured: flash-attention loops ran fully replicated without these — see
+# EXPERIMENTS.md §Perf iteration 1). The launcher pins the ambient axes via
+# set_activation_mesh(); model code sprinkles constrain(x, (...)) where 'dp'
+# / 'tp' name the data-parallel axes / tensor-parallel axis. When no mesh is
+# configured (unit tests, CPU runs) constrain() is a no-op.
+# ---------------------------------------------------------------------------
+
+_ACT: dict = {"dp": None, "tp": None}
+
+
+def set_activation_mesh(dp: Optional[Sequence[str]], tp: Optional[str]):
+    _ACT["dp"] = tuple(dp) if dp else None
+    _ACT["tp"] = tp
+
+
+def clear_activation_mesh():
+    set_activation_mesh(None, None)
+
+
+def constrain(x, dims: tuple):
+    """dims: per-axis entries in {'dp', 'tp', None}."""
+    if _ACT["dp"] is None and _ACT["tp"] is None:
+        return x
+    spec = []
+    for d in dims:
+        if d == "dp" and _ACT["dp"]:
+            spec.append(_ACT["dp"] if len(_ACT["dp"]) > 1 else _ACT["dp"][0])
+        elif d == "tp" and _ACT["tp"]:
+            spec.append(_ACT["tp"])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _spec_for(path: tuple[str, ...], ndim: int, fsdp, tp) -> P:
+    name = path[-1]
+    joined = "/".join(path)
+
+    def pad(spec_dims: list) -> P:
+        extra = ndim - len(spec_dims)
+        return P(*([None] * extra + spec_dims))
+
+    if name == "embed":
+        return pad([tp, fsdp])  # (V, d)
+    if name == "lm_head":
+        return pad([fsdp, tp])  # (d, V)
+    if name in ("wq", "wk", "wv"):
+        return pad([fsdp, tp])
+    if name == "wo":
+        return pad([tp, fsdp])
+    if name in ("w_in", "w_gate", "w_out"):
+        if "moe" in joined:
+            if name == "w_out":
+                return pad([tp, None, fsdp])  # (E, f, d)
+            return pad([tp, fsdp, None])  # (E, d, f)
+        if name == "w_out":
+            return pad([tp, fsdp])  # (f, d)
+        return pad([fsdp, tp])  # (d, f)
+    if name == "router":
+        return pad([fsdp, None])
+    if name == "in_proj":
+        return pad([fsdp, tp])
+    if name == "out_proj":
+        return pad([tp, fsdp])
+    if name == "conv_w":
+        return pad([None, tp])
+    if name in ("conv_b",):
+        return pad([tp])
+    if name in ("A_log", "D", "dt_bias"):
+        return pad([tp])
+    if name == "norm" and "mamba" in joined:
+        return pad([tp])
+    # norms and other small vectors: replicated
+    return P(*([None] * ndim))
+
+
+def _path_names(key_path) -> tuple[str, ...]:
+    names = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_specs(abstract_params: Any, fsdp: Sequence[str] = FSDP,
+                tp: Optional[str] = TP) -> Any:
+    """PartitionSpec pytree matching an (abstract) param pytree.
+    tp=None (single-axis data mesh) drops the tensor-parallel dims."""
+    fsdp_t = tuple(fsdp)
+    fa = fsdp_t if len(fsdp_t) > 1 else fsdp_t[0]
+
+    def rule(key_path, leaf):
+        return _spec_for(_path_names(key_path), leaf.ndim, fa, tp)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def batch_spec(batch_shardable: bool, fsdp: Sequence[str] = FSDP) -> P:
+    fsdp_t = tuple(fsdp)
+    fa = fsdp_t if len(fsdp_t) > 1 else fsdp_t[0]
+    return P(fa) if batch_shardable else P(None)
+
+
+def cache_specs(lm, fsdp: Sequence[str] = FSDP, tp: str = TP,
+                batch_shardable: bool = True, mode: str = "auto",
+                tp_size: int = 16) -> list:
+    """Spec pytree mirroring LM.init_caches structure.
+
+    Attention KV caches (count[, inner], B, S, KV, hd): batch over fsdp and
+    ONE of {kv-heads, head-dim, sequence} over tp:
+      heads — fully local decode attention (preferred; needs KV % tp == 0);
+      hd    — local scores with a small per-layer all-reduce (hd % tp == 0);
+      seq   — sequence-parallel softmax (always legal, but the decode-write
+              DUS on the sharded dim costs ~2x cache in temps: §Perf it. 4).
+    mode="auto" picks heads > hd > seq by divisibility.
+    Mamba caches: ssm (count[, inner], B, H, P, N) — heads over tp;
+    conv (count[, inner], B, K-1, C) — channels over tp.
+    """
+    fsdp_t = tuple(fsdp)
+    fa = (fsdp_t if len(fsdp_t) > 1 else fsdp_t[0]) if batch_shardable else None
+    cfg = lm.cfg
+    if mode == "auto":
+        if cfg.n_kv and cfg.n_kv % tp_size == 0:
+            mode = "heads"
+        elif cfg.hd % tp_size == 0:
+            mode = "hd"
+        else:
+            mode = "seq"
+
+    def attn_spec(extra: int):
+        lead = [None] * extra
+        if mode == "heads":
+            sp = P(*lead, fa, None, tp, None)
+        elif mode == "hd":
+            sp = P(*lead, fa, None, None, tp)
+        else:
+            sp = P(*lead, fa, tp, None, None)
+        return (sp, sp)
+
+    def cross_spec(extra: int):
+        lead = [None] * extra
+        # image KV is short: shard kv-heads dim over tp only if divisible
+        return (P(*lead, fa, None, None, None), P(*lead, fa, None, None, None))
+
+    def mamba_spec(extra: int):
+        lead = [None] * extra
+        return (P(*lead, fa, tp, None, None), P(*lead, fa, None, tp))
+
+    specs = []
+    for kind, _count in lm.plan:
+        if kind in ("dense", "moe"):
+            specs.append(attn_spec(1))
+        elif kind == "moe_pair":
+            specs.append({"dense": attn_spec(1), "moe": attn_spec(1)})
+        elif kind == "mamba":
+            specs.append(mamba_spec(1))
+        elif kind == "zamba_super":
+            specs.append({"mamba": mamba_spec(2), "attn": attn_spec(1)})
+        elif kind == "vlm_super":
+            specs.append({"dense": attn_spec(2), "cross": cross_spec(1)})
+        else:
+            raise ValueError(kind)
+    return specs

@@ -1,0 +1,60 @@
+"""Batched serving engine: prefill + greedy decode against padded caches."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import LM
+
+
+def pad_caches(lm: LM, caches, cur_len: int, target_len: int):
+    """Grow attention KV caches from cur_len to target_len along the seq axis
+    (mamba/conv/cross-image caches are length-independent and pass through).
+    """
+    cfg = lm.cfg
+    kv = max(cfg.n_kv, 1)
+
+    def pad_leaf(x):
+        if (
+            x.ndim >= 4
+            and x.shape[-3] == cur_len
+            and x.shape[-2] == kv
+            and x.shape[-1] == cfg.hd
+        ):
+            pad = [(0, 0)] * x.ndim
+            pad[-3] = (0, target_len - cur_len)
+            return jnp.pad(x, pad)
+        return x
+
+    return jax.tree.map(pad_leaf, caches)
+
+
+class Engine:
+    def __init__(self, lm: LM, params, max_len: int):
+        self.lm = lm
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(lm.prefill)
+        self._decode = jax.jit(lm.decode_step)
+
+    def generate(
+        self,
+        tokens: jnp.ndarray,  # (B, P) prompt
+        steps: int,
+        img: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        B, P = tokens.shape
+        assert P + steps <= self.max_len
+        logits, caches = self._prefill(self.params, tokens, img)
+        caches = pad_caches(self.lm, caches, P, self.max_len)
+        out = [jnp.argmax(logits, -1).astype(jnp.int32)]
+        for i in range(steps - 1):
+            tok = out[-1][:, None]
+            logits, caches = self._decode(
+                self.params, tok, caches, jnp.int32(P + i), img
+            )
+            out.append(jnp.argmax(logits, -1).astype(jnp.int32))
+        return jnp.stack(out, axis=1)  # (B, steps)

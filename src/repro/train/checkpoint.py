@@ -1,0 +1,147 @@
+"""Checkpoint manager: atomic, async, keep-N, elastic.
+
+Layout: <dir>/step_<n>/arrays.npz + manifest.json. Writes go to a temp dir
+followed by an atomic os.rename, so a preempted writer can never leave a
+half-checkpoint that restore would pick up. An optional background thread
+makes ``save`` non-blocking (device->host copy happens synchronously — cheap
+relative to disk — the disk write overlaps the next steps).
+
+Elasticity: arrays are stored *unsharded* (gathered to host), so a restore
+may target ANY mesh/topology — the caller supplies the new shardings and we
+device_put into them. At 1000+-node scale you would write per-host shards
+instead; the manifest already records the logical shapes needed to reassemble
+(see DESIGN.md §6 — the interface here is what matters for the framework).
+
+Fault-tolerance contract used by launch/train.py:
+  * SIGTERM -> finish current step, save, exit 0 (preemption-safe);
+  * restart -> ``latest_step`` + ``restore`` resumes bit-exact (data pipeline
+    is seekable by step).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path
+        )
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype not in (np.float32, np.float64, np.int32, np.int64,
+                             np.uint32, np.uint64, np.int8, np.uint8,
+                             np.int16, np.uint16, np.bool_):
+            # bf16 & friends: store a raw uint16/8 view; the dtype is
+            # recovered from the abstract tree at restore time
+            arr = arr.view(np.uint8 if arr.itemsize == 1 else np.uint16)
+        flat[key] = arr
+    return flat
+
+
+def _unflatten_into(tree: Any, flat: dict[str, np.ndarray]) -> Any:
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in leaves_paths:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path
+        )
+        arr = flat[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        want = np.dtype(leaf.dtype)
+        if arr.dtype != want:
+            arr = arr.view(want) if arr.itemsize == want.itemsize \
+                else arr.astype(want)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---- write ----
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> None:
+        flat = _flatten(tree)  # sync device->host
+        meta = dict(step=int(step), time=time.time(), **(extra or {}))
+        self.wait()
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, meta), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, flat, meta)
+
+    def _write(self, step: int, flat: dict, meta: dict) -> None:
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"))
+
+    # ---- read ----
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        step: int,
+        abstract_tree: Any,
+        shardings: Optional[Any] = None,
+    ) -> Any:
+        """Restore into the structure of ``abstract_tree``; if ``shardings``
+        (a matching pytree of jax.sharding.Sharding) is given, device_put
+        each leaf into it — this is the elastic-remesh path: the target mesh
+        may differ arbitrarily from the mesh that wrote the checkpoint."""
+        path = os.path.join(self.dir, f"step_{step:010d}", "arrays.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten_into(abstract_tree, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda leaf, sh: jax.device_put(leaf, sh), tree, shardings
+            )
+        return tree

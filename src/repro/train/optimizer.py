@@ -1,0 +1,119 @@
+"""AdamW with scale-friendly memory knobs (no external deps).
+
+Knobs that matter at 256-512 chips:
+* ``moment_dtype`` — bf16 moments halve optimizer HBM (the default for the
+  >100B configs in the dry-run; f32 for real small-scale training);
+* ``master_dtype`` — optional f32 master copy of bf16 params (accuracy) or
+  None to update bf16 params directly via an f32 compute path (memory);
+* global-norm clipping computed in f32 across the sharded tree (one small
+  all-reduce, fused by XLA with the gradient reduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    master_dtype: Optional[str] = None  # "float32" to keep a master copy
+    warmup_steps: int = 100
+    schedule: str = "cosine"  # cosine | constant
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    t = jnp.clip(
+        (s - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> dict:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_dtype is not None:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.dtype(cfg.master_dtype)), params
+        )
+    return state
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves)
+    )
+
+
+def adamw_update(
+    grads: Any, state: dict, params: Any, cfg: AdamWConfig
+) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    src = state.get("master", params)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        mf = m.astype(jnp.float32) * b1 + g * (1 - b1)
+        vf = v.astype(jnp.float32) * b2 + g * g * (1 - b2)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                        + cfg.weight_decay * pf * (p.ndim >= 2))
+        return pf, mf.astype(mdt), vf.astype(mdt)
+
+    out = jax.tree.map(upd, src, grads, state["m"], state["v"])
+    treedef = jax.tree.structure(params)
+    flat = jax.tree.leaves(out, is_leaf=lambda x: isinstance(x, tuple))
+    pf_leaves = [t[0] for t in flat]
+    m_leaves = [t[1] for t in flat]
+    v_leaves = [t[2] for t in flat]
+    param_dtypes = [l.dtype for l in jax.tree.leaves(params)]
+    new_params = jax.tree.unflatten(
+        treedef, [pf.astype(dt) for pf, dt in zip(pf_leaves, param_dtypes)]
+    )
+    new_state = {
+        "m": jax.tree.unflatten(treedef, m_leaves),
+        "v": jax.tree.unflatten(treedef, v_leaves),
+        "step": step,
+    }
+    if "master" in state:
+        new_state["master"] = jax.tree.unflatten(
+            treedef,
+            [pf.astype(jnp.dtype(cfg.master_dtype)) for pf in pf_leaves],
+        )
+    stats = dict(grad_norm=gnorm, lr=lr)
+    return new_params, new_state, stats

@@ -1,0 +1,20 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run sets its own count in its
+# own process). Kernel tests force the interpret/ref paths explicitly.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_clustered_points(rng, n=400, d=6, centers=5, spread=0.05):
+    """Low-doubling-dimension testbed: Gaussian clusters on a 2-D manifold."""
+    base = rng.normal(size=(centers, d)) * 3.0
+    asg = rng.integers(0, centers, n)
+    return (base[asg] + spread * rng.normal(size=(n, d))).astype(np.float32)

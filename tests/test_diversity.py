@@ -1,0 +1,101 @@
+"""Table-1 objective implementations: exact solvers vs brute force, jnp vs
+host, Lemma-1 bookkeeping."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.diversity import (
+    VARIANTS,
+    _bipartition_exact,
+    _tsp_held_karp,
+    diversity,
+    f_of_k,
+    farness_lower_bound,
+    jnp_diversity,
+)
+from repro.core.geometry import pairwise_matrix
+
+
+def _rand_D(rng, k):
+    pts = rng.normal(size=(k, 3))
+    D = np.sqrt(((pts[:, None] - pts[None]) ** 2).sum(-1))
+    np.fill_diagonal(D, 0.0)
+    return D
+
+
+def test_f_of_k():
+    assert f_of_k("sum", 5) == 10
+    assert f_of_k("star", 5) == 4
+    assert f_of_k("tree", 5) == 4
+    assert f_of_k("cycle", 5) == 5
+    assert f_of_k("bipartition", 5) == 6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 7), st.integers(0, 1000))
+def test_tsp_held_karp_vs_bruteforce(k, seed):
+    D = _rand_D(np.random.default_rng(seed), k)
+    hk = _tsp_held_karp(D)
+    best = min(
+        sum(D[p[i], p[(i + 1) % k]] for i in range(k))
+        for p in itertools.permutations(range(k))
+    )
+    assert abs(hk - best) < 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 8), st.integers(0, 1000))
+def test_bipartition_vs_bruteforce(k, seed):
+    D = _rand_D(np.random.default_rng(seed), k)
+    ex = _bipartition_exact(D)
+    half = k // 2
+    best = np.inf
+    for q in itertools.combinations(range(k), half):
+        mask = np.zeros(k, bool)
+        mask[list(q)] = True
+        best = min(best, D[mask][:, ~mask].sum())
+    assert abs(ex - best) < 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(3, 9), st.integers(0, 1000))
+def test_jnp_matches_host(k, seed):
+    D = _rand_D(np.random.default_rng(seed), k)
+    for v in ("sum", "star", "tree"):
+        a = diversity(D, v)
+        b = float(jnp_diversity(jnp.asarray(D, jnp.float32), v))
+        assert abs(a - b) / max(a, 1e-9) < 1e-4, v
+
+
+def test_tree_is_mst():
+    from scipy.sparse.csgraph import minimum_spanning_tree
+
+    rng = np.random.default_rng(3)
+    D = _rand_D(rng, 12)
+    ours = diversity(D, "tree")
+    ref = minimum_spanning_tree(D).sum()
+    assert abs(ours - ref) < 1e-8
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 500))
+def test_lemma1_lower_bounds_hold(k, seed):
+    """rho_{S,k} >= bound(Delta): on UNIFORM matroids the optimum over all
+    k-subsets must satisfy Lemma 1 (which holds for any matroid)."""
+    rng = np.random.default_rng(seed)
+    n = 10
+    pts = rng.normal(size=(n, 3))
+    D = np.sqrt(((pts[:, None] - pts[None]) ** 2).sum(-1))
+    delta = D.max()
+    for v in VARIANTS:
+        best = max(
+            diversity(D[np.ix_(c, c)], v)
+            for c in itertools.combinations(range(n), k)
+        )
+        rho = best / f_of_k(v, k)
+        lo = farness_lower_bound(delta, k, v)
+        assert rho >= lo - 1e-9, (v, rho, lo)

@@ -1,0 +1,78 @@
+"""Gonzalez GMM clustering: invariants + the Alg.-1 stopping rule."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_clustered_points
+from repro.core.gmm import gmm, gmm_fixed, gmm_radius
+
+
+def test_assignment_is_nearest_center(rng):
+    pts = make_clustered_points(rng, n=300)
+    res = gmm_fixed(jnp.asarray(pts), jnp.ones((300,), bool), 10)
+    centers = np.asarray(res.centers)[: int(res.num_centers)]
+    P = np.asarray(pts)
+    D = np.sqrt(((P[:, None] - P[None, centers]) ** 2).sum(-1))
+    # min_dist matches distance to assigned center and is the row min
+    assign = np.asarray(res.assign)
+    md = np.asarray(res.min_dist)
+    np.testing.assert_allclose(md, D.min(axis=1), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        md, D[np.arange(300), assign], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_radius_2approx(rng):
+    """Gonzalez guarantee: gmm radius(tau) <= 2 * r*_tau <= 2 * radius of ANY
+    concrete tau-clustering (we build one with k-means)."""
+    centers = 5
+    pts = make_clustered_points(rng, n=500, centers=centers, spread=0.02)
+    P = np.asarray(pts)
+    res = gmm_fixed(jnp.asarray(pts), jnp.ones((500,), bool), centers)
+    gmm_radius_val = float(res.radius)
+    # construct one concrete 5-clustering: true generator assignment
+    # (recover by proximity to cluster means)
+    from scipy.cluster.vq import kmeans2
+
+    centroids, labels = kmeans2(P, centers, minit="++", seed=1)
+    r_ref = 0.0
+    for c in range(centers):
+        m = labels == c
+        if m.any():
+            # radius around the member closest to the centroid
+            d = np.sqrt(((P[m] - centroids[c]) ** 2).sum(-1))
+            anchor = P[m][np.argmin(d)]
+            r_ref = max(r_ref, np.sqrt(((P[m] - anchor) ** 2).sum(-1)).max())
+    assert gmm_radius_val <= 2.0 * r_ref + 1e-5
+
+
+def test_delta_brackets_diameter(rng):
+    pts = make_clustered_points(rng, n=200)
+    P = np.asarray(pts)
+    res = gmm_fixed(jnp.asarray(pts), jnp.ones((200,), bool), 4)
+    diam = np.sqrt(((P[:, None] - P[None]) ** 2).sum(-1)).max()
+    delta = float(res.delta)
+    assert diam / 2 - 1e-6 <= delta <= diam + 1e-6
+
+
+def test_radius_target_stopping(rng):
+    """Alg. 1: stop when radius <= eps*delta/(16k)."""
+    pts = make_clustered_points(rng, n=400, centers=8, spread=0.01)
+    k, eps = 3, 0.8
+    res = gmm_radius(jnp.asarray(pts), jnp.ones((400,), bool), k, eps, 400)
+    target = eps * float(res.delta) / (16 * k)
+    assert float(res.radius) <= target
+    # and it should not have used absurdly many centers on clustered data
+    assert int(res.num_centers) < 400
+
+
+def test_masked_points_ignored(rng):
+    pts = np.concatenate(
+        [make_clustered_points(rng, n=100), 1e6 * np.ones((5, 6), np.float32)]
+    )
+    valid = np.ones(105, bool)
+    valid[100:] = False
+    res = gmm_fixed(jnp.asarray(pts), jnp.asarray(valid), 6)
+    centers = np.asarray(res.centers)[: int(res.num_centers)]
+    assert all(c < 100 for c in centers)
+    assert float(res.radius) < 1e3

@@ -1,0 +1,190 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(the kernel body executes in python on CPU) + the recurrent SSD ground truth.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+PDIST_SHAPES = [
+    (8, 8, 4), (33, 17, 7), (128, 64, 32), (200, 300, 25), (5, 1000, 3),
+]
+
+
+@pytest.mark.parametrize("n,m,d", PDIST_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pdist_kernel(n, m, d, dtype):
+    rng = np.random.default_rng(n * 1000 + m)
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    y = jnp.asarray(rng.normal(size=(m, d)), dtype)
+    a = ops.pairwise_sqdist(x, y, force="ref")
+    b = ops.pairwise_sqdist(x, y, force="interpret")
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol,
+                               atol=tol)
+
+
+@pytest.mark.parametrize("n,d", [(16, 4), (100, 25), (1025, 7), (64, 128)])
+def test_gmm_step_kernel(n, d):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    md = jnp.asarray(rng.uniform(0.5, 3.0, size=(n,)), jnp.float32)
+    valid = jnp.asarray(rng.random(n) > 0.1)
+    r_ref = ops.gmm_update(x, z, md, valid, force="ref")
+    r_pl = ops.gmm_update(x, z, md, valid, force="interpret")
+    np.testing.assert_allclose(
+        np.asarray(r_ref[0]), np.asarray(r_pl[0]), rtol=1e-5, atol=1e-5
+    )
+    assert int(r_ref[1]) == int(r_pl[1])
+    np.testing.assert_allclose(float(r_ref[2]), float(r_pl[2]), rtol=1e-5)
+
+
+SSD_SHAPES = [
+    (2, 16, 8, 4), (3, 32, 16, 8), (1, 64, 32, 16), (4, 8, 64, 32),
+]
+
+
+@pytest.mark.parametrize("g,q,p,n", SSD_SHAPES)
+def test_ssd_kernel_vs_ref(g, q, p, n):
+    rng = np.random.default_rng(g * 100 + q)
+    xb = jnp.asarray(rng.normal(size=(g, q, p)), jnp.float32)
+    la = jnp.asarray(-rng.uniform(0.01, 0.4, size=(g, q)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(g, q, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(g, q, n)), jnp.float32)
+    y1, s1, dfs1, td1 = ops.ssd_intra_chunk(xb, la, B, C, force="ref")
+    y2, s2, dfs2, td2 = ops.ssd_intra_chunk(xb, la, B, C, force="interpret")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_chunked_matches_recurrent_scan():
+    """Chunked/kernel math == step-by-step recurrence (the real oracle)."""
+    rng = np.random.default_rng(0)
+    l, p, n = 48, 8, 6
+    xb = jnp.asarray(rng.normal(size=(l, p)), jnp.float32)
+    la = jnp.asarray(-rng.uniform(0.01, 0.3, size=(l,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(l, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(l, n)), jnp.float32)
+    ys, s_fin = ref.ssd_reference_scan(xb, la, B, C)
+    # chunked: 3 chunks of 16 with state carry
+    q = 16
+    s = jnp.zeros((n, p))
+    outs = []
+    for c in range(l // q):
+        sl = slice(c * q, (c + 1) * q)
+        yi, st, dfs, td = ref.ssd_intra_chunk(xb[sl], la[sl], B[sl], C[sl])
+        y_off = (C[sl] @ s) * dfs[:, None]  # (q, p)
+        outs.append(yi + y_off)
+        s = td * s + st
+    y_chunked = jnp.concatenate(outs)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(y_chunked),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), np.asarray(s), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_models_ssd_matches_recurrence():
+    """models/mamba.ssd_chunked (batched einsum form) == recurrent oracle."""
+    from repro.models.mamba import ssd_chunked
+
+    rng = np.random.default_rng(1)
+    b, l, h, p, n = 2, 32, 3, 8, 5
+    xb = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    la = jnp.asarray(-rng.uniform(0.01, 0.3, size=(b, l, h)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
+    y, s_fin = ssd_chunked(xb, la, B, C, chunk=8)
+    for bi in range(b):
+        for hi in range(h):
+            ys, sf = ref.ssd_reference_scan(
+                xb[bi, :, hi], la[bi, :, hi], B[bi], C[bi]
+            )
+            np.testing.assert_allclose(
+                np.asarray(y[bi, :, hi]), np.asarray(ys), rtol=2e-4, atol=2e-4
+            )
+            np.testing.assert_allclose(
+                np.asarray(s_fin[bi, hi]), np.asarray(sf).T, rtol=2e-4,
+                atol=2e-4,
+            )
+
+
+FLASH_SHAPES = [
+    (4, 64, 64, 16, True), (2, 48, 80, 32, False), (3, 33, 33, 8, True),
+    (1, 128, 128, 64, True), (2, 96, 32, 16, False),
+]
+
+
+@pytest.mark.parametrize("bh,sq,skv,hd,causal", FLASH_SHAPES)
+def test_flash_fwd_kernel(bh, sq, skv, hd, causal):
+    rng = np.random.default_rng(bh * sq)
+    q = jnp.asarray(rng.normal(size=(bh, sq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh, skv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bh, skv, hd)), jnp.float32)
+    a = ops.flash_attention_fwd(q, k, v, causal=causal, force="ref")
+    b = ops.flash_attention_fwd(q, k, v, causal=causal, q_block=16,
+                                kv_block=32, force="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_flash_fwd_kernel_matches_model_attention():
+    """Kernel == models/attention.py flash path (heads pre-flattened)."""
+    from repro.models.common import blockwise_attention
+
+    rng = np.random.default_rng(7)
+    B, S, H, hd = 2, 64, 4, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    want = blockwise_attention(q, k, v, causal=True, q_block=16, kv_block=16)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    got = ops.flash_attention_fwd(qf, kf, vf, causal=True, q_block=16,
+                                  kv_block=16, force="interpret")
+    got = got.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bh,sq,skv,hd,causal", [
+    (2, 64, 64, 16, True), (1, 48, 80, 32, False), (2, 33, 33, 8, True),
+])
+def test_flash_bwd_kernels(bh, sq, skv, hd, causal):
+    """dq/dk/dv Pallas kernels == dense-softmax VJP."""
+    from repro.kernels.flash import flash_attention_bwd
+
+    rng = np.random.default_rng(bh + sq)
+    q = jnp.asarray(rng.normal(size=(bh, sq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh, skv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bh, skv, hd)), jnp.float32)
+
+    def dense(q, k, v):
+        s = jnp.einsum("bqh,bkh->bqk", q, k) / np.sqrt(hd)
+        if causal:
+            m = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None]
+            s = jnp.where(m[None], s, -1e30)
+        p = jax.nn.softmax(s, -1)
+        return jnp.einsum("bqk,bkh->bqh", p, v)
+
+    o = dense(q, k, v)
+    s = jnp.einsum("bqh,bkh->bqk", q, k) / np.sqrt(hd)
+    if causal:
+        m = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None]
+        s = jnp.where(m[None], s, -1e30)
+    lse = jax.nn.logsumexp(s, -1)
+    do = jnp.asarray(rng.normal(size=o.shape), jnp.float32)
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, o, lse, do, causal=causal, q_block=16, kv_block=32,
+        interpret=True,
+    )
+    g = jax.vjp(dense, q, k, v)[1](do)
+    for a, b in zip((dq, dk, dv), g):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                                   atol=2e-3)

@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests (reduced configs): forward + one train step
+on CPU, output shapes, finite losses; decode-vs-forward consistency."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import LM
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_state import StepConfig, init_train_state, make_train_step
+
+
+def _inputs(cfg, lm, B=2, S=32, seed=1):
+    rng = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab)
+    img = None
+    if cfg.family == "vlm":
+        img = 0.1 * jax.random.normal(
+            rng, (B, cfg.n_img_tokens, cfg.d_model), lm.dtype
+        )
+    return toks, img
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_and_loss(arch):
+    cfg = get_config(arch).reduced()
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    toks, img = _inputs(cfg, lm)
+    logits, aux, _ = lm.forward(params, toks, img, remat=False)
+    assert logits.shape == (2, 32, cfg.vocab_padded)
+    loss, metrics = lm.loss(params, toks, img)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(float(metrics["ce"]))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    lm = LM(cfg)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    state = init_train_state(lm, jax.random.PRNGKey(0), opt_cfg)
+    step = make_train_step(lm, opt_cfg, StepConfig())
+    toks, img = _inputs(cfg, lm)
+    batch = {"tokens": toks}
+    if img is not None:
+        batch["img"] = img
+    state2, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state2["step"]) == 1
+    # params actually changed
+    d0 = jax.tree.leaves(state["params"])[0]
+    d1 = jax.tree.leaves(state2["params"])[0]
+    assert not np.allclose(np.asarray(d0, np.float32),
+                           np.asarray(d1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    toks, img = _inputs(cfg, lm, B, S)
+    logits_full, _, _ = lm.forward(params, toks, img, remat=False)
+    _, caches = lm.prefill(params, toks[:, : S - 1], img)
+
+    def pad_leaf(x):
+        if (
+            x.ndim >= 4
+            and x.shape[-3] == S - 1
+            and x.shape[-2] == max(cfg.n_kv, 1)
+            and x.shape[-1] == cfg.hd
+        ):
+            pad = [(0, 0)] * x.ndim
+            pad[-3] = (0, 1)
+            return jnp.pad(x, pad)
+        return x
+
+    caches = jax.tree.map(pad_leaf, caches)
+    logits_dec, _ = lm.decode_step(
+        params, toks[:, S - 1 : S], caches, jnp.int32(S - 1), img
+    )
+    a = np.asarray(logits_full[:, -1], np.float32)
+    b = np.asarray(logits_dec, np.float32)
+    err = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+    assert err < 0.05, err
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_init_caches_structure_matches_prefill(arch):
+    """init_caches (the dry-run cache spec source) must structurally match
+    what prefill actually emits."""
+    cfg = get_config(arch).reduced()
+    lm = LM(cfg)
+    params = lm.abstract_params()
+    S = 16
+    toks = jax.ShapeDtypeStruct((2, S), jnp.int32)
+    img = (
+        jax.ShapeDtypeStruct((2, cfg.n_img_tokens, cfg.d_model), lm.dtype)
+        if cfg.family == "vlm" else None
+    )
+    _, caches = jax.eval_shape(lambda p, t: lm.prefill(p, t, img and jnp.zeros(img.shape, img.dtype)), params, toks) \
+        if img is None else jax.eval_shape(lambda p, t, i: lm.prefill(p, t, i), params, toks, img)
+    want = jax.eval_shape(lambda: lm.init_caches(2, S))
+    t1 = jax.tree.structure(caches)
+    t2 = jax.tree.structure(want)
+    assert t1 == t2, (t1, t2)
+    for a, b in zip(jax.tree.leaves(caches), jax.tree.leaves(want)):
+        assert a.shape == b.shape, (a.shape, b.shape)
+
+
+def test_microbatch_grads_match_full_batch():
+    """M=4 grad accumulation == single full-batch step (same update)."""
+    cfg = get_config("smollm-135m").reduced()
+    lm = LM(cfg)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (8, 16), 0, cfg.vocab)
+    outs = []
+    for M in (1, 4):
+        state = init_train_state(lm, jax.random.PRNGKey(0), opt_cfg)
+        step = make_train_step(lm, opt_cfg, StepConfig(microbatches=M))
+        s2, m = jax.jit(step)(state, {"tokens": toks})
+        outs.append((s2, float(m["loss"])))
+    assert abs(outs[0][1] - outs[1][1]) < 1e-3
+    for a, b in zip(jax.tree.leaves(outs[0][0]["params"]),
+                    jax.tree.leaves(outs[1][0]["params"])):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-2, atol=2e-4,
+        )
