@@ -21,11 +21,11 @@ import sys
 sys.path.insert(0, {src!r})
 from benchmarks.common import songs_like, wikipedia_like, Timer
 from repro.core import solve_dmmc
+from repro.launch.mesh import make_mesh
 
 n, k, tau, l, ds = {n}, {k}, {tau}, {l}, {ds!r}
 P, cats, caps, spec = (songs_like if ds == "songs" else wikipedia_like)(n)
-mesh = jax.make_mesh((l,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((l,), ("data",))
 with Timer() as t:
     sol = solve_dmmc(P, k, spec, cats=cats, caps=caps, tau=tau,
                      setting="mapreduce", mesh=mesh, metric="cosine")

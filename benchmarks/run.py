@@ -25,6 +25,7 @@ def main() -> None:
         fig3_mapreduce,
         kernel_bench,
         roofline_report,
+        serve_bench,
         variants_quality,
     )
 
@@ -35,6 +36,7 @@ def main() -> None:
         ("fig1", fig1_seq_vs_amt.main),
         ("fig2", fig2_streaming.main),
         ("fig3", fig3_mapreduce.main),
+        ("serve", serve_bench.main),
         ("roofline", roofline_report.main),
     ]
     print("name,us_per_call,derived")

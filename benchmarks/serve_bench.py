@@ -1,0 +1,116 @@
+"""Serving benchmark: ingest throughput, cached-vs-cold query latency,
+batched QPS for the online diversity service.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--quick] [--json]
+
+``--json`` writes a ``BENCH_serve.json`` artifact (repo root) so the perf
+trajectory is tracked across PRs. Also wired into ``benchmarks.run``.
+
+Workload: songs-like partition instance (Table 2 structure). "Cold" is the
+full offline driver (``solve_dmmc`` streaming: rebuild coreset + pdist +
+solve); "warm" answers on the service's cached coreset distance matrix. The
+acceptance bar for this subsystem is warm >= 5x faster than cold.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import Timer, csv_line, songs_like
+
+
+def _bench(quick: bool) -> dict:
+    from repro.core import solve_dmmc
+    from repro.serve.diversity import DiversityQuery, DiversityService
+
+    n = 4000 if quick else 20000
+    k, tau, batch = 8, 32, 512
+    P, cats, caps, spec = songs_like(n)
+
+    svc = DiversityService(spec, k, tau=tau, caps=caps)
+    # first tiny batch pays the jit compile; time steady-state ingestion
+    svc.ingest(P[:batch], cats[:batch])
+    with Timer() as t_ing:
+        for off in range(batch, n, batch):
+            svc.ingest(P[off:off + batch], cats[off:off + batch])
+    ingest_pps = (n - batch) / t_ing.s
+
+    # cold: offline driver from raw points (coreset + pdist + solve)
+    with Timer() as t_cold:
+        sol = solve_dmmc(P, k, spec, cats=cats, caps=caps, tau=tau,
+                         setting="streaming")
+    # warm single-query latency on the cached matrix (median of reps)
+    svc.query(DiversityQuery(k=k))  # builds + caches the matrix
+    reps = 5 if quick else 20
+    lat = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = svc.query(DiversityQuery(k=k))
+        lat.append(time.perf_counter() - t0)
+    warm_s = float(np.median(lat))
+    assert res.from_cache and svc.cache.stats.builds == 1
+
+    # batched heterogeneous queries (32) against one cache entry
+    qs = [
+        DiversityQuery(
+            k=2 + i % 7,
+            caps=None if i % 2 else tuple(np.maximum(1, caps // 2).tolist()),
+            allowed_cats=None if i % 3 else frozenset(range(8)),
+        )
+        for i in range(32)
+    ]
+    svc.query_batch(qs)  # compile the vmapped solver for this shape
+    with Timer() as t_b:
+        out = svc.query_batch(qs)
+    assert svc.cache.stats.builds == 1, "batched path rebuilt the matrix"
+    qps = len(out) / t_b.s
+
+    speedup = t_cold.s / warm_s
+    return dict(
+        n=n, k=k, tau=tau,
+        coreset_size=int(res.coreset_size),
+        ingest_points_per_s=float(ingest_pps),
+        cold_solve_s=float(t_cold.s),
+        warm_query_s=warm_s,
+        warm_speedup_vs_cold=float(speedup),
+        batched_qps=float(qps),
+        batch_size=len(out),
+        offline_diversity=float(sol.diversity),
+        warm_diversity=float(res.diversity),
+        pdist_builds=int(svc.cache.stats.builds),
+        cache_hits=int(svc.cache.stats.hits),
+    )
+
+
+def main(quick: bool = False, emit_json: bool = False):
+    r = _bench(quick)
+    if emit_json:
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_serve.json")
+        with open(path, "w") as f:
+            json.dump(r, f, indent=2)
+    yield csv_line("serve_ingest", 1e6 / r["ingest_points_per_s"],
+                   f"pps={r['ingest_points_per_s']:.0f}")
+    yield csv_line("serve_cold_solve", r["cold_solve_s"] * 1e6,
+                   f"n={r['n']}")
+    yield csv_line("serve_warm_query", r["warm_query_s"] * 1e6,
+                   f"speedup={r['warm_speedup_vs_cold']:.1f}x")
+    yield csv_line("serve_batched", 1e6 / r["batched_qps"],
+                   f"qps={r['batched_qps']:.0f} batch={r['batch_size']}")
+    if r["warm_speedup_vs_cold"] < 5.0:
+        yield csv_line("serve_SPEEDUP_BELOW_5X", 0.0,
+                       f"{r['warm_speedup_vs_cold']:.2f}x")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in main(quick=args.quick, emit_json=args.json):
+        print(line, flush=True)

@@ -1,0 +1,38 @@
+"""JAX version compatibility shims shared across the repo.
+
+The installed JAX may predate two API moves used by the distributed paths:
+
+* ``jax.shard_map`` (with ``check_vma``) vs the older
+  ``jax.experimental.shard_map.shard_map`` (with ``check_rep``);
+* ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)``
+  (see ``launch.mesh.make_mesh`` for the mesh-side shim).
+
+Pallas-specific shims live in ``kernels.compat``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` across the experimental->core promotion."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` (newer JAX) or the psum(1) equivalent."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -26,8 +26,16 @@ from .matroid import (
     make_host_matroid,
 )
 from .distributed_gmm import distributed_coreset
+from .final_solve import coreset_distance_matrix, final_solve
 from .solve import DMMCSolution, solve_dmmc
-from .streaming import stream_coreset, stream_coreset_host
+from .streaming import (
+    StreamState,
+    ingest_batch,
+    init_stream_state,
+    snapshot_coreset,
+    stream_coreset,
+    stream_coreset_host,
+)
 
 __all__ = [
     "VARIANTS", "Variant", "diversity", "f_of_k", "farness_lower_bound",
@@ -39,4 +47,6 @@ __all__ = [
     "make_host_matroid", "DMMCSolution", "solve_dmmc", "stream_coreset",
     "distributed_coreset",
     "stream_coreset_host",
+    "StreamState", "init_stream_state", "ingest_batch", "snapshot_coreset",
+    "coreset_distance_matrix", "final_solve",
 ]

@@ -1,0 +1,86 @@
+"""Final-stage DMMC solver over a *precomputed* coreset distance matrix.
+
+The paper's split (§4.4): the expensive combinatorial solver only ever sees
+the coreset, so the distance matrix over the coreset is a small, reusable
+object. This module is the single implementation shared by the offline
+driver (``solve.solve_dmmc``) and the online serving layer
+(``serve.diversity``), which caches the matrix across queries:
+
+    D = coreset_distance_matrix(coreset_points)     # Pallas pdist on TPU
+    X, val = final_solve(D, matroid, k, variant)    # host solver, reads D only
+
+Keeping both callers on the same distance computation and the same solver
+makes the service's answers *exactly* equal to ``solve_dmmc`` on the same
+coreset (the parity tests in tests/test_service.py assert this).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kernel_ops
+from .diversity import Variant
+from .exhaustive import exhaustive_best
+from .local_search import local_search_sum
+from .matroid import Matroid
+
+
+def coreset_distance_matrix(
+    points: np.ndarray, *, force: Optional[str] = None
+) -> np.ndarray:
+    """(m, d) -> (m, m) Euclidean distances via the tiled pdist kernel.
+
+    Dispatches through ``kernels.ops`` (Pallas on TPU, jnp reference off-TPU)
+    so offline and serving paths produce the same float32 matrix.
+    """
+    pts = jnp.asarray(points, jnp.float32)
+    d2 = kernel_ops.pairwise_sqdist(pts, pts, force=force)
+    return np.asarray(jnp.sqrt(jnp.maximum(d2, 0.0)))
+
+
+class SubsetMatroidView(Matroid):
+    """View of a host matroid restricted to ``sub`` with local indexing.
+
+    Local index i stands for global element sub[i]; solvers run on local
+    indices (rows of the coreset distance matrix), oracle queries are
+    translated to the global ground set.
+    """
+
+    def __init__(self, matroid: Matroid, sub: np.ndarray):
+        self.matroid = matroid
+        self.sub = np.asarray(sub, np.int64)
+        self.spec = matroid.spec
+
+    def can_extend(self, idxs, x):
+        return self.matroid.can_extend(
+            [int(self.sub[i]) for i in idxs], int(self.sub[x])
+        )
+
+    def is_independent(self, idxs):
+        return self.matroid.is_independent([int(self.sub[i]) for i in idxs])
+
+
+def final_solve(
+    D: np.ndarray,
+    matroid: Matroid,
+    k: int,
+    variant: Variant,
+    *,
+    idxs: Optional[Sequence[int]] = None,
+    gamma: float = 0.0,
+) -> tuple[list[int], float]:
+    """Best independent k-subset of ``idxs`` under ``variant``, reading only D.
+
+    sum    -> AMT local search (the paper's coreset solver, footnote 5);
+    others -> exhaustive search with matroid pruning (exact on the coreset).
+    Returns (selected local indices, diversity value).
+    """
+    if idxs is None:
+        idxs = list(range(D.shape[0]))
+    if variant == "sum":
+        X, val, _ = local_search_sum(D, matroid, k, idxs, gamma=gamma)
+    else:
+        X, val, _complete = exhaustive_best(D, matroid, k, idxs, variant)
+    return [int(i) for i in X], float(val)

@@ -23,8 +23,7 @@ import numpy as np
 from . import geometry
 from .coreset import seq_coreset, seq_coreset_host
 from .diversity import Variant, diversity
-from .exhaustive import exhaustive_best
-from .local_search import local_search_sum
+from .final_solve import SubsetMatroidView, coreset_distance_matrix, final_solve
 from .mapreduce import mapreduce_coreset
 from .matroid import MatroidSpec, make_host_matroid
 from .streaming import stream_coreset
@@ -64,24 +63,10 @@ def _final_solve(
     pts = np.asarray(
         geometry.normalize_for_metric(jnp.asarray(points[sub]), "euclidean")
     )
-    Dsub = np.asarray(geometry.dists(jnp.asarray(pts), jnp.asarray(pts)))
-    # map into a matrix indexed by original ids via a wrapper matroid view
-    local = {int(g): i for i, g in enumerate(sub)}
-
-    class _View:
-        def can_extend(self, idxs, x):
-            return matroid.can_extend([int(sub[i]) for i in idxs], int(sub[x]))
-
-        def is_independent(self, idxs):
-            return matroid.is_independent([int(sub[i]) for i in idxs])
-
-    view = _View()
-    locals_ = list(range(len(sub)))
-    if variant == "sum":
-        X, val, _ = local_search_sum(Dsub, view, k, locals_, gamma=gamma)
-    else:
-        X, val, _complete = exhaustive_best(Dsub, view, k, locals_, variant)
-    return [int(sub[i]) for i in X], float(val)
+    Dsub = coreset_distance_matrix(pts)
+    view = SubsetMatroidView(matroid, sub)
+    X, val = final_solve(Dsub, view, k, variant, gamma=gamma)
+    return [int(sub[i]) for i in X], val
 
 
 def solve_dmmc(

@@ -1,6 +1,18 @@
 """Streaming coreset construction (paper Alg. 2 "StreamCoreset" + the
 tau-controlled doubling variant of §5.2), as a single jit'd lax.scan.
 
+The scan is exposed as a resumable *ingestion API* — the substrate of the
+online serving layer (serve/diversity):
+
+    st = init_stream_state(d, gamma, spec, k, tau)
+    st = ingest_batch(st, batch, cats, valid, spec, caps, k, tau,
+                      base_index=offset)     # any number of times
+    coreset = snapshot_coreset(st)
+
+``stream_coreset`` (the one-shot entry point) is now a thin wrapper over
+these three; batched ingestion is bit-identical to a single pass because the
+scan branches only on ``st.n_seen``.
+
 State (all static shapes; TCAP centers, SLOT delegate slots per center):
   R          scalar estimate (diameter for Alg. 2; radius for the variant)
   x1         first stream point (Alg. 2's anchor for the diameter estimate)
@@ -186,35 +198,31 @@ def _filter_centers(st: StreamState, thr):
     return keep
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("spec", "k", "tau", "slot_cap", "variant", "c_const"),
-)
-def stream_coreset(
-    points: jnp.ndarray,  # (n, d) metric-normalized stream order
-    cats: jnp.ndarray,  # (n, gamma)
-    valid: jnp.ndarray,  # (n,)
+def default_slot_cap(spec: MatroidSpec, k: int) -> int:
+    """Static per-center delegate capacity (Alg. 2 size bounds)."""
+    if spec.kind in ("uniform", "partition"):
+        return k
+    return max(spec.gamma, 1) * k * k
+
+
+def init_stream_state(
+    d: int,
+    gamma: int,
     spec: MatroidSpec,
-    caps: Optional[jnp.ndarray],
     k: int,
     tau: int,
     *,
     slot_cap: Optional[int] = None,
-    variant: str = "radius",  # "radius" (§5.2 tau-controlled) | "diameter" (Alg. 2)
-    eps: float = 0.5,
-    c_const: int = 32,
-) -> tuple[Coreset, StreamState]:
-    """One-pass streaming coreset. Returns (coreset, final state)."""
-    n, d = points.shape
-    gamma = cats.shape[1]
+) -> StreamState:
+    """Empty resumable scan state (the ingestion API's starting point).
+
+    The returned state is a pure pytree of static-shape buffers: feed it to
+    ``ingest_batch`` any number of times, snapshot with ``snapshot_coreset``.
+    """
     tcap = tau + 1
     if slot_cap is None:
-        slot_cap = k if spec.kind in ("uniform", "partition") else max(
-            spec.gamma, 1
-        ) * k * k
-    caps_arr = caps if caps is not None else jnp.zeros((1,), jnp.int32)
-
-    st0 = StreamState(
+        slot_cap = default_slot_cap(spec, k)
+    return StreamState(
         R=jnp.float32(0.0),
         x1=jnp.zeros((d,), jnp.float32),
         n_seen=jnp.int32(0),
@@ -226,6 +234,50 @@ def stream_coreset(
         ds=jnp.full((tcap, slot_cap), -1, jnp.int32),
         overflow=jnp.int32(0),
     )
+
+
+def snapshot_coreset(st: StreamState) -> Coreset:
+    """Assemble the current coreset from the delegate buffers (jit-safe)."""
+    tcap, slot_cap, d = st.dp.shape
+    gamma = st.dc.shape[2]
+    flat_valid = st.dv.reshape(-1) & jnp.repeat(st.cvalid, slot_cap)
+    return Coreset(
+        points=st.dp.reshape(-1, d),
+        cats=st.dc.reshape(-1, gamma),
+        valid=flat_valid,
+        src_idx=jnp.where(flat_valid, st.ds.reshape(-1), -1),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "k", "tau", "variant", "c_const"),
+)
+def ingest_batch(
+    st0: StreamState,
+    points: jnp.ndarray,  # (n, d) metric-normalized stream order
+    cats: jnp.ndarray,  # (n, gamma)
+    valid: jnp.ndarray,  # (n,)
+    spec: MatroidSpec,
+    caps: Optional[jnp.ndarray],
+    k: int,
+    tau: int,
+    *,
+    base_index: jnp.ndarray = 0,  # global stream offset of points[0]
+    variant: str = "radius",  # "radius" (§5.2 tau-controlled) | "diameter" (Alg. 2)
+    eps: float = 0.5,
+    c_const: int = 32,
+) -> StreamState:
+    """Resume the jit'd Alg.-2 scan over one batch of the stream.
+
+    ``st0`` is ``init_stream_state(...)`` or the state returned by a previous
+    ``ingest_batch`` call; ``base_index`` offsets the delegates' ``src_idx``
+    so they stay global across batches. The scan branches on ``st.n_seen``,
+    so resuming mid-stream is exact: the concatenation of batches yields
+    bit-identical state to a single one-shot pass.
+    """
+    n, d = points.shape
+    caps_arr = caps if caps is not None else jnp.zeros((1,), jnp.int32)
 
     def open_center(st: StreamState, x, xc, xsrc) -> StreamState:
         slot = jnp.argmin(st.cvalid)
@@ -324,20 +376,34 @@ def stream_coreset(
         )
         return st, None
 
-    st, _ = jax.lax.scan(
-        step,
-        st0,
-        (points, cats, jnp.arange(n, dtype=jnp.int32), valid.astype(bool)),
+    src = jnp.asarray(base_index, jnp.int32) + jnp.arange(n, dtype=jnp.int32)
+    st, _ = jax.lax.scan(step, st0, (points, cats, src, valid.astype(bool)))
+    return st
+
+
+def stream_coreset(
+    points: jnp.ndarray,  # (n, d) metric-normalized stream order
+    cats: jnp.ndarray,  # (n, gamma)
+    valid: jnp.ndarray,  # (n,)
+    spec: MatroidSpec,
+    caps: Optional[jnp.ndarray],
+    k: int,
+    tau: int,
+    *,
+    slot_cap: Optional[int] = None,
+    variant: str = "radius",  # "radius" (§5.2 tau-controlled) | "diameter" (Alg. 2)
+    eps: float = 0.5,
+    c_const: int = 32,
+) -> tuple[Coreset, StreamState]:
+    """One-pass streaming coreset: init + single ingest_batch + snapshot."""
+    n, d = points.shape
+    gamma = cats.shape[1]
+    st0 = init_stream_state(d, gamma, spec, k, tau, slot_cap=slot_cap)
+    st = ingest_batch(
+        st0, points, cats, valid, spec, caps, k, tau,
+        variant=variant, eps=eps, c_const=c_const,
     )
-    # assemble coreset from delegate buffers
-    flat_valid = st.dv.reshape(-1) & jnp.repeat(st.cvalid, st.dv.shape[1])
-    cs = Coreset(
-        points=st.dp.reshape(-1, d),
-        cats=st.dc.reshape(-1, gamma),
-        valid=flat_valid,
-        src_idx=jnp.where(flat_valid, st.ds.reshape(-1), -1),
-    )
-    return cs, st
+    return snapshot_coreset(st), st
 
 
 def stream_coreset_host(

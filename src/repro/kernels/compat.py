@@ -1,0 +1,12 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and the
+installed version may carry either name). Every kernel in this package goes
+through this shim instead of touching ``pltpu`` directly, so an upgrade of
+the toolchain is a one-line change here rather than a sweep of the kernels.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

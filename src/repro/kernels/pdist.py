@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _pdist_kernel(x_ref, y_ref, o_ref):
     k = pl.program_id(2)
@@ -76,7 +78,7 @@ def pairwise_sqdist(
         ],
         out_specs=pl.BlockSpec((bn, bm), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((xp.shape[0], yp.shape[0]), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -14,6 +14,24 @@ import numpy as np
 import jax
 
 
+def make_mesh(shape, axes, devices=None):
+    """``jax.make_mesh`` across the AxisType API drift: newer JAX wants
+    explicit ``axis_types``; 0.4.x has neither ``jax.sharding.AxisType`` nor
+    the kwarg. All mesh construction in this repo goes through here."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kwargs = {} if devices is None else dict(devices=devices)
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axes)
+    try:
+        return jax.make_mesh(shape, axes, **kwargs)
+    except TypeError:  # older make_mesh without devices kwarg
+        from jax.sharding import Mesh
+
+        devs = devices if devices is not None else jax.devices()
+        need = int(np.prod(shape))
+        return Mesh(np.asarray(devs[:need]).reshape(shape), axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -25,15 +43,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "(launch/dryrun.py sets this automatically)"
         )
-    try:
-        return jax.make_mesh(
-            shape, axes, devices=devices[:need],
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        )
-    except TypeError:  # older make_mesh without devices kwarg
-        from jax.sharding import Mesh
-
-        return Mesh(np.asarray(devices[:need]).reshape(shape), axes)
+    return make_mesh(shape, axes, devices=devices[:need])
 
 
 def data_axes(mesh) -> tuple[str, ...]:

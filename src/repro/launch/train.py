@@ -29,6 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCH_IDS, get_config
 from ..data.pipeline import DataConfig, Pipeline
+from .mesh import make_mesh
 from ..models.model import LM
 from ..models.sharding import param_specs, set_activation_mesh
 from ..train.checkpoint import CheckpointManager
@@ -75,10 +76,7 @@ def main():
           f"({'reduced' if args.reduced else 'full'})")
 
     n_dev = args.data_axis_size or len(jax.devices())
-    mesh = jax.make_mesh(
-        (n_dev,), ("data",),
-        axis_types=(jax.sharding.AxisType.Auto,),
-    )
+    mesh = make_mesh((n_dev,), ("data",))
     set_activation_mesh(("data",) if args.batch % n_dev == 0 else None, None)
 
     opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,

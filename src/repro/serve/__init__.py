@@ -1,0 +1,1 @@
+"""Serving layer: batched LM engine + online diversity query service."""

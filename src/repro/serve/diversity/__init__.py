@@ -1,0 +1,18 @@
+"""Online diversity query service (the paper's web-search/recommendation
+workload, §1): keep a small (1-eps)-coreset as *the* serving state, ingest
+the stream incrementally, answer many heterogeneous queries against a cached
+coreset distance matrix — never touching the full dataset.
+
+    svc = DiversityService(spec, k=10, tau=64, caps=caps, metric="cosine")
+    svc.ingest(batch, cats=batch_cats)          # any number of times
+    res = svc.query(DiversityQuery(k=10))       # exact solve_dmmc parity
+    out = svc.query_batch([q1, q2, ...])        # vmapped fast path for sum
+"""
+from .cache import CacheKey, CacheStats, CoresetEntry, DistanceCache
+from .query import DiversityQuery, QueryResult
+from .service import DiversityService, IngestReport
+
+__all__ = [
+    "CacheKey", "CacheStats", "CoresetEntry", "DistanceCache",
+    "DiversityQuery", "QueryResult", "DiversityService", "IngestReport",
+]

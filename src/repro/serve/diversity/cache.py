@@ -1,0 +1,105 @@
+"""Coreset/distance-matrix cache for the diversity service.
+
+One entry per ``(MatroidSpec, tau, metric)`` configuration: the compacted,
+metric-normalized coreset buffer plus its pairwise distance matrix (built by
+the Pallas pdist kernel via ``core.final_solve.coreset_distance_matrix``).
+An entry is keyed additionally by a *fingerprint* of the coreset contents —
+ingestion that leaves the coreset unchanged (the common steady-state case:
+most stream points become non-delegates) keeps the matrix warm; the entry is
+rebuilt only when the coreset actually changed.
+
+``CacheStats`` is the observability hook the tests and serve_bench use to
+assert "no pdist recomputation on the warm path".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import numpy as np
+
+from ...core.final_solve import coreset_distance_matrix
+from ...core.matroid import MatroidSpec
+
+
+class CacheKey(NamedTuple):
+    spec: MatroidSpec
+    tau: int
+    metric: str
+
+
+@dataclasses.dataclass
+class CoresetEntry:
+    """Compacted coreset (valid rows only, buffer order) + its distances."""
+
+    points: np.ndarray  # f32[m, d] metric-normalized
+    cats: np.ndarray  # int32[m, gamma]
+    src_idx: np.ndarray  # int64[m] global stream indices
+    D: np.ndarray  # f32[m, m] pairwise Euclidean distances
+    fingerprint: int
+
+    @property
+    def size(self) -> int:
+        return int(self.src_idx.shape[0])
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    builds: int = 0  # pdist matrix constructions (the expensive part)
+    invalidations: int = 0
+
+
+def coreset_fingerprint(valid: np.ndarray, src_idx: np.ndarray) -> int:
+    """Cheap content hash: the coreset is determined by (valid, src_idx)
+    since points/cats are copies of the stream rows named by src_idx."""
+    return hash((valid.tobytes(), src_idx.tobytes()))
+
+
+class DistanceCache:
+    """Maps CacheKey -> CoresetEntry, invalidating on fingerprint change."""
+
+    def __init__(
+        self,
+        build_fn: Callable[[np.ndarray], np.ndarray] = coreset_distance_matrix,
+    ):
+        self._build_fn = build_fn
+        self._entries: dict[CacheKey, CoresetEntry] = {}
+        self.stats = CacheStats()
+
+    def lookup(self, key: CacheKey, fingerprint: int) -> Optional[CoresetEntry]:
+        e = self._entries.get(key)
+        if e is not None and e.fingerprint == fingerprint:
+            self.stats.hits += 1
+            return e
+        if e is not None:
+            self.stats.invalidations += 1
+            del self._entries[key]
+        self.stats.misses += 1
+        return None
+
+    def build(
+        self,
+        key: CacheKey,
+        points: np.ndarray,
+        cats: np.ndarray,
+        src_idx: np.ndarray,
+        fingerprint: int,
+    ) -> CoresetEntry:
+        D = self._build_fn(points)
+        self.stats.builds += 1
+        e = CoresetEntry(
+            points=points, cats=cats, src_idx=src_idx, D=D,
+            fingerprint=fingerprint,
+        )
+        self._entries[key] = e
+        return e
+
+    def invalidate(self, key: CacheKey) -> None:
+        if key in self._entries:
+            del self._entries[key]
+            self.stats.invalidations += 1
+
+    def __len__(self) -> int:
+        return len(self._entries)

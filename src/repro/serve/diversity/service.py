@@ -1,0 +1,337 @@
+"""Stateful online diversity service (ingestion + cached query answering).
+
+Serving state is exactly what the paper says to keep (§4.4, §5.2): the
+resumable streaming-scan state (``core.streaming.StreamState``) and the small
+(1-eps)-coreset it induces. Queries never touch the raw stream:
+
+  ingest     resume the jit'd Alg.-2 scan over each arriving batch
+             (``ingest_batch``), with global ``src_idx`` bookkeeping;
+  cache      the compacted coreset + its pairwise distance matrix live in a
+             ``DistanceCache`` keyed by (MatroidSpec, tau, metric) and a
+             content fingerprint — ingestion that does not change the
+             coreset keeps the matrix warm;
+  query      answered on the cached matrix only: the host final-stage solver
+             (bit-identical to ``solve_dmmc``) for any variant/matroid, or
+             the vmapped batched sum solver (query.solve_sum_batch) for
+             batches of sum queries under uniform/partition matroids.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import geometry
+from ...core.final_solve import SubsetMatroidView, final_solve
+from ...core.matroid import MatroidSpec, make_host_matroid
+from ...core.streaming import (
+    StreamState,
+    ingest_batch,
+    init_stream_state,
+    snapshot_coreset,
+)
+from .cache import CacheKey, CoresetEntry, DistanceCache, coreset_fingerprint
+from .query import (
+    DiversityQuery,
+    QueryResult,
+    candidate_mask,
+    solve_sum_batch,
+)
+
+
+@dataclasses.dataclass
+class IngestReport:
+    n: int  # points in this batch
+    total: int  # stream points offered so far
+    coreset_size: int
+    coreset_changed: bool
+    ingest_s: float
+
+
+class DiversityService:
+    """Online DMMC: incremental coreset ingestion + cached batched queries."""
+
+    def __init__(
+        self,
+        spec: MatroidSpec,
+        k: int,
+        *,
+        tau: int,
+        metric: geometry.Metric = "euclidean",
+        caps: Optional[np.ndarray] = None,
+        slot_cap: Optional[int] = None,
+        variant: str = "radius",
+        eps: float = 0.5,
+        c_const: int = 32,
+        oracle=None,
+        cache: Optional[DistanceCache] = None,
+    ):
+        if spec.kind == "general" and oracle is None:
+            raise ValueError("general matroid service needs a host oracle")
+        if spec.kind == "partition" and caps is None:
+            raise ValueError("partition matroid service needs per-category caps")
+        self.spec = spec
+        self.k = int(k)
+        self.tau = int(tau)
+        self.metric = metric
+        self.caps = None if caps is None else np.asarray(caps, np.int32)
+        self._caps_j = None if caps is None else jnp.asarray(caps, jnp.int32)
+        self.slot_cap = slot_cap
+        self.stream_variant = variant
+        self.eps = float(eps)
+        self.c_const = int(c_const)
+        self.oracle = oracle
+        self.cache = cache if cache is not None else DistanceCache()
+        self.cache_key = CacheKey(spec=spec, tau=self.tau, metric=str(metric))
+        self._state: Optional[StreamState] = None
+        self._gamma_width = max(spec.gamma, 1)
+        self.n_offered = 0
+        self._fingerprint: Optional[int] = None
+
+    # ------------------------------------------------------------------
+    # ingestion
+    # ------------------------------------------------------------------
+
+    @property
+    def state(self) -> Optional[StreamState]:
+        return self._state
+
+    def ingest(
+        self, points: np.ndarray, cats: Optional[np.ndarray] = None
+    ) -> IngestReport:
+        """Feed one batch of the stream (any size) into the scan state."""
+        t0 = time.perf_counter()
+        pts = np.asarray(points, np.float32)
+        n, d = pts.shape
+        if cats is None:
+            cats_arr = np.zeros((n, self._gamma_width), np.int32)
+        else:
+            cats_arr = np.asarray(cats, np.int32).reshape(n, -1)
+        if cats_arr.shape[1] != self._gamma_width:
+            raise ValueError(
+                f"cats width {cats_arr.shape[1]} != spec gamma "
+                f"{self._gamma_width}"
+            )
+        if self._state is None:
+            self._state = init_stream_state(
+                d, self._gamma_width, self.spec, self.k, self.tau,
+                slot_cap=self.slot_cap,
+            )
+        pts_norm = geometry.normalize_for_metric(
+            jnp.asarray(pts, jnp.float32), self.metric
+        )
+        self._state = ingest_batch(
+            self._state,
+            pts_norm,
+            jnp.asarray(cats_arr),
+            jnp.ones((n,), bool),
+            self.spec,
+            self._caps_j,
+            self.k,
+            self.tau,
+            base_index=jnp.int32(self.n_offered),
+            variant=self.stream_variant,
+            eps=self.eps,
+            c_const=self.c_const,
+        )
+        self.n_offered += n
+        # fingerprint from the (small) valid/src buffers only — the point
+        # buffer is pulled to host lazily, on a cache miss in _entry()
+        cs = snapshot_coreset(self._state)
+        valid = np.asarray(cs.valid)
+        src_c = np.asarray(cs.src_idx)[valid].astype(np.int64)
+        fp = coreset_fingerprint(valid, src_c)
+        changed = fp != self._fingerprint
+        self._fingerprint = fp
+        return IngestReport(
+            n=n,
+            total=self.n_offered,
+            coreset_size=int(src_c.shape[0]),
+            coreset_changed=changed,
+            ingest_s=time.perf_counter() - t0,
+        )
+
+    def snapshot(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Compacted current coreset (points, cats, src_idx), buffer order —
+        identical row order to ``solve_dmmc(..., setting='streaming')``."""
+        if self._state is None:
+            raise RuntimeError("ingest at least one batch first")
+        cs = snapshot_coreset(self._state)
+        valid = np.asarray(cs.valid)
+        return (
+            np.asarray(cs.points)[valid],
+            np.asarray(cs.cats)[valid],
+            np.asarray(cs.src_idx)[valid].astype(np.int64),
+        )
+
+    # ------------------------------------------------------------------
+    # cached distance matrix
+    # ------------------------------------------------------------------
+
+    def _entry(self) -> tuple[CoresetEntry, bool]:
+        """Current cache entry (building the matrix only if the coreset
+        changed since it was last built). Returns (entry, was_cached)."""
+        if self._fingerprint is None:
+            raise RuntimeError("ingest at least one batch first")
+        e = self.cache.lookup(self.cache_key, self._fingerprint)
+        if e is not None:
+            return e, True
+        pts_c, cats_c, src_c = self.snapshot()
+        e = self.cache.build(
+            self.cache_key, pts_c, cats_c, src_c, self._fingerprint
+        )
+        return e, False
+
+    # ------------------------------------------------------------------
+    # queries
+    # ------------------------------------------------------------------
+
+    def _host_matroid(self, entry: CoresetEntry, q: DiversityQuery):
+        m = entry.size
+        if self.spec.kind == "general":
+            base = make_host_matroid(
+                self.spec, None, None, self.n_offered, q.k, self.oracle
+            )
+            return SubsetMatroidView(base, entry.src_idx)
+        caps = self.caps if q.caps is None else np.asarray(q.caps, np.int32)
+        return make_host_matroid(self.spec, entry.cats, caps, m, q.k)
+
+    def _answer_host(
+        self, entry: CoresetEntry, q: DiversityQuery, cached: bool
+    ) -> QueryResult:
+        matroid = self._host_matroid(entry, q)
+        idxs = np.flatnonzero(
+            candidate_mask(entry.cats, q.allowed_cats)
+        ).tolist()
+        X, val = final_solve(
+            entry.D, matroid, q.k, q.variant, idxs=idxs, gamma=q.gamma
+        )
+        loc = np.asarray(X, np.int64)
+        return QueryResult(
+            indices=entry.src_idx[loc],
+            local_indices=loc,
+            diversity=val,
+            variant=q.variant,
+            engine="host",
+            coreset_size=entry.size,
+            from_cache=cached,
+        )
+
+    def _vmap_eligible(self, q: DiversityQuery) -> bool:
+        return q.variant == "sum" and self.spec.kind in ("uniform", "partition")
+
+    def _answer_vmap(
+        self, entry: CoresetEntry, qs: list[DiversityQuery], cached: bool
+    ) -> list[QueryResult]:
+        m = entry.size
+        if self.spec.kind == "partition":
+            cats1 = jnp.asarray(entry.cats[:, 0], jnp.int32)
+            h = self.spec.num_categories
+            default_caps = self.caps
+        else:  # uniform: one pseudo-category nobody caps
+            cats1 = jnp.zeros((m,), jnp.int32)
+            h = 1
+            default_caps = None
+        kmax = max(q.k for q in qs)
+        caps_b = np.empty((len(qs), h), np.int32)
+        allow_b = np.empty((len(qs), m), bool)
+        for i, q in enumerate(qs):
+            if q.caps is not None:
+                caps_b[i] = np.asarray(q.caps, np.int32)
+            elif default_caps is not None:
+                caps_b[i] = default_caps
+            else:
+                caps_b[i] = m + 1  # effectively uncapped
+            allow_b[i] = candidate_mask(entry.cats, q.allowed_cats)
+        ks = jnp.asarray([q.k for q in qs], jnp.int32)
+        gammas = jnp.asarray([q.gamma for q in qs], jnp.float32)
+        sel, nsel, div = solve_sum_batch(
+            jnp.asarray(entry.D),
+            cats1,
+            jnp.asarray(caps_b),
+            jnp.asarray(allow_b),
+            ks,
+            gammas,
+            kmax=kmax,
+        )
+        sel, nsel, div = np.asarray(sel), np.asarray(nsel), np.asarray(div)
+        out = []
+        for i, q in enumerate(qs):
+            loc = sel[i, : nsel[i]].astype(np.int64)
+            # report the true float64 objective of the selection (the jit
+            # solver accumulates in f32; indices are what it decided on)
+            val = float(
+                np.asarray(entry.D, np.float64)[np.ix_(loc, loc)].sum() / 2.0
+            )
+            out.append(
+                QueryResult(
+                    indices=entry.src_idx[loc],
+                    local_indices=loc,
+                    diversity=val,
+                    variant=q.variant,
+                    engine="vmap",
+                    coreset_size=m,
+                    from_cache=cached,
+                )
+            )
+        return out
+
+    def query(
+        self, q: DiversityQuery, *, engine: str = "host"
+    ) -> QueryResult:
+        """Answer one query on the cached coreset matrix.
+
+        The default host engine is the exact final-stage solver shared with
+        ``solve_dmmc`` — a warm query therefore matches the offline driver's
+        answer bit for bit.
+        """
+        entry, cached = self._entry()
+        if engine == "vmap":
+            if not self._vmap_eligible(q):
+                raise ValueError(
+                    f"vmap engine supports sum under uniform/partition, got "
+                    f"{q.variant!r} under {self.spec.kind!r}"
+                )
+            return self._answer_vmap(entry, [q], cached)[0]
+        return self._answer_host(entry, q, cached)
+
+    def query_batch(
+        self, queries: Sequence[DiversityQuery], *, engine: str = "auto"
+    ) -> list[QueryResult]:
+        """Answer a batch of heterogeneous queries against ONE cache entry.
+
+        engine='auto' routes sum/uniform/partition queries through the
+        vmapped batched solver and everything else (transversal, general,
+        star/tree/cycle/bipartition) through the host solver; 'host'/'vmap'
+        force a path. The distance matrix is fetched (and possibly built)
+        exactly once per batch regardless of batch size.
+        """
+        queries = list(queries)
+        if not queries:
+            return []
+        entry, cached = self._entry()
+        if engine not in ("auto", "host", "vmap"):
+            raise ValueError(engine)
+        if engine == "host":
+            return [self._answer_host(entry, q, cached) for q in queries]
+        vmap_idx = [
+            i for i, q in enumerate(queries) if self._vmap_eligible(q)
+        ]
+        if engine == "vmap" and len(vmap_idx) != len(queries):
+            raise ValueError("vmap engine forced on ineligible queries")
+        results: list[Optional[QueryResult]] = [None] * len(queries)
+        if vmap_idx:
+            for i, r in zip(
+                vmap_idx,
+                self._answer_vmap(
+                    entry, [queries[i] for i in vmap_idx], cached
+                ),
+            ):
+                results[i] = r
+        for i, q in enumerate(queries):
+            if results[i] is None:
+                results[i] = self._answer_host(entry, q, cached)
+        return results  # type: ignore[return-value]

@@ -8,6 +8,10 @@ property, verified end to end.
 import numpy as np
 import pytest
 import jax.numpy as jnp
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
 from hypothesis import given, settings, strategies as st
 
 from conftest import make_clustered_points

@@ -35,8 +35,8 @@ def test_mapreduce_coreset_8_shards():
         cats = rng.integers(0, h, (n, 1)).astype(np.int32)
         caps = np.full(h, 2, np.int32)
         spec = MatroidSpec("partition", num_categories=h, gamma=1)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("data",))
         s_mr = solve_dmmc(P, k, spec, cats=cats, caps=caps, tau=64,
                           setting="mapreduce", mesh=mesh)
         s_mr2 = solve_dmmc(P, k, spec, cats=cats, caps=caps, tau=64,
@@ -62,12 +62,13 @@ def test_compressed_pod_allreduce():
         from jax.sharding import PartitionSpec as P
         from repro.train.compression import (
             pod_allreduce_compressed, init_residual)
-        mesh = jax.make_mesh((8,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("pod",))
         g_global = jnp.asarray(
             np.random.default_rng(0).normal(size=(8, 64)), jnp.float32)
 
-        @functools.partial(jax.shard_map, mesh=mesh,
+        from repro.compat import shard_map
+        @functools.partial(shard_map, mesh=mesh,
                            in_specs=(P("pod"), P("pod")),
                            out_specs=(P("pod"), P("pod")))
         def run(g, r):
@@ -107,8 +108,8 @@ def test_elastic_restore_across_device_counts(tmp_path):
         toks = jax.random.randint(jax.random.PRNGKey(5), (8, 16), 0,
                                   cfg.vocab)
         n = len(jax.devices())
-        mesh = jax.make_mesh((n,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((n,), ("data",))
         pspecs = param_specs(lm.abstract_params(), ("data",), tp=None)
         sspecs = {"params": pspecs,
                   "opt": {"m": pspecs, "v": pspecs, "step": P(),
@@ -171,8 +172,8 @@ def test_global_gmm_matches_single_machine():
         cats = rng.integers(0, h, (n, 1)).astype(np.int32)
         caps = np.full(h, 2, np.int32)
         spec = MatroidSpec("partition", num_categories=h, gamma=1)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("data",))
         cs, radius, delta = distributed_coreset(
             mesh, jnp.asarray(P), jnp.asarray(cats), jnp.ones((n,), bool),
             spec, jnp.asarray(caps), k, tau)
