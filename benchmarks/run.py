@@ -1,6 +1,12 @@
 """Benchmark harness: one entry per paper table/figure + kernel microbench.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run --check
+
+``--check`` is the serving-perf regression gate: it reruns
+``serve_bench --quick`` and exits 1 if ``ingest_points_per_s`` or
+``batched_qps`` regressed more than 20% against the committed
+``BENCH_serve.json``.
 
 Prints ``name,us_per_call,derived`` CSV (paper analogues documented in each
 module; DESIGN.md §9 maps benchmarks -> paper figures).
@@ -16,7 +22,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--check", action="store_true",
+                    help="rerun serve_bench --quick and fail on >20%% "
+                         "regression vs the committed BENCH_serve.json")
     args = ap.parse_args()
+
+    if args.check:
+        from . import serve_bench
+
+        sys.exit(serve_bench.check())
 
     from . import (
         coreset_sizes,

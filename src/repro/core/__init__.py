@@ -25,12 +25,20 @@ from .matroid import (
     UniformMatroid,
     make_host_matroid,
 )
+from .compose import (
+    merge_stream_states,
+    snapshot_shards,
+    union_coresets,
+    unstack_shards,
+)
 from .distributed_gmm import distributed_coreset
 from .final_solve import coreset_distance_matrix, final_solve
 from .solve import DMMCSolution, solve_dmmc
 from .streaming import (
     StreamState,
     ingest_batch,
+    ingest_batch_sharded,
+    init_sharded_states,
     init_stream_state,
     snapshot_coreset,
     stream_coreset,
@@ -48,5 +56,8 @@ __all__ = [
     "distributed_coreset",
     "stream_coreset_host",
     "StreamState", "init_stream_state", "ingest_batch", "snapshot_coreset",
+    "ingest_batch_sharded", "init_sharded_states",
+    "merge_stream_states", "snapshot_shards", "union_coresets",
+    "unstack_shards",
     "coreset_distance_matrix", "final_solve",
 ]

@@ -1,0 +1,132 @@
+"""Coreset composition (paper §3: composability under union).
+
+The paper's Lemma backing both the MapReduce construction (§4.2) and the
+sharded serving layer: if S_1, ..., S_m partition S and T_i is an
+(eps, k)-coreset of S_i, then U_i T_i is an (eps, k)-coreset of S. Shards
+can therefore build coresets independently (``ingest_batch_sharded``) and
+be combined after the fact:
+
+``union_coresets``       plain buffer concatenation — the exact union, no
+                         quality loss, size grows with the shard count;
+``snapshot_shards``      the union of a *stacked* per-shard ``StreamState``'s
+                         coresets (vmapped snapshot + flatten), preserving
+                         shard-major row order;
+``merge_stream_states``  re-filter the union back to a single <= tau-center
+                         ``StreamState`` by re-ingesting every shard's
+                         delegates (with their global ``src_idx`` kept)
+                         through the tau-controlled scan — a coreset of a
+                         coreset, i.e. still a coreset of S with the eps
+                         compounding per §3.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .coreset import Coreset, concat_coresets
+from .matroid import MatroidSpec
+from .streaming import (
+    StreamState,
+    ingest_batch,
+    init_stream_state,
+    snapshot_coreset,
+)
+
+
+def union_coresets(coresets: Sequence[Coreset]) -> Coreset:
+    """Union of coresets of a partition = coreset of the whole (§3)."""
+    return concat_coresets(list(coresets))
+
+
+def unstack_shards(sts: StreamState) -> list[StreamState]:
+    """Split a stacked per-shard state (leading shard axis) into a list."""
+    num_shards = sts.cvalid.shape[0]
+    return [
+        jax.tree_util.tree_map(lambda x, s=s: x[s], sts)
+        for s in range(num_shards)
+    ]
+
+
+def snapshot_shards(sts: StreamState) -> Coreset:
+    """Union coreset of a stacked per-shard ``StreamState``.
+
+    Rows are shard-major (shard 0's buffer order, then shard 1's, ...): the
+    same order as ``union_coresets([snapshot_coreset(s) for s in shards])``.
+    """
+    cs = jax.vmap(snapshot_coreset)(sts)
+    flat = lambda x: x.reshape((-1,) + x.shape[2:])
+    return Coreset(
+        points=flat(cs.points),
+        cats=flat(cs.cats),
+        valid=flat(cs.valid),
+        src_idx=flat(cs.src_idx),
+    )
+
+
+def compact_coreset(cs: Coreset) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side (points, cats, src_idx) of the valid rows, buffer order."""
+    valid = np.asarray(cs.valid)
+    return (
+        np.asarray(cs.points)[valid],
+        np.asarray(cs.cats)[valid],
+        np.asarray(cs.src_idx)[valid].astype(np.int64),
+    )
+
+
+def merge_stream_states(
+    states: Union[StreamState, Sequence[StreamState]],
+    spec: MatroidSpec,
+    caps: Optional[jnp.ndarray],
+    k: int,
+    tau: int,
+    *,
+    variant: str = "radius",
+    eps: float = 0.5,
+    c_const: int = 32,
+    slot_cap: Optional[int] = None,
+    block_size: int = 1,  # one small one-shot pass: per-point compiles faster
+) -> StreamState:
+    """Merge per-shard stream states into one <= tau-center state.
+
+    The union of the shards' delegate sets (a coreset of the whole stream,
+    §3) is itself streamed through the tau-controlled scan, which re-filters
+    it back to tau centers; delegates keep their *global* ``src_idx``, so
+    the merged coreset still names original stream rows. ``states`` is a
+    list of per-shard states or a stacked state with a leading shard axis.
+    """
+    if isinstance(states, StreamState):
+        states = (
+            unstack_shards(states) if states.cvalid.ndim == 2 else [states]
+        )
+    pts, cats, srcs = [], [], []
+    for st in states:
+        p, c, s = compact_coreset(snapshot_coreset(st))
+        pts.append(p)
+        cats.append(c)
+        srcs.append(s)
+    P = np.concatenate(pts)
+    C = np.concatenate(cats)
+    S = np.concatenate(srcs)
+    d = P.shape[1]
+    gamma = C.shape[1]
+    if slot_cap is None:
+        slot_cap = states[0].dv.shape[1]
+    st = init_stream_state(d, gamma, spec, k, tau, slot_cap=slot_cap)
+    return ingest_batch(
+        st,
+        jnp.asarray(P, jnp.float32),
+        jnp.asarray(C, jnp.int32),
+        jnp.ones((P.shape[0],), bool),
+        spec,
+        caps,
+        k,
+        tau,
+        src=jnp.asarray(S, jnp.int32),
+        variant=variant,
+        eps=eps,
+        c_const=c_const,
+        block_size=block_size,
+    )

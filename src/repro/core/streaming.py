@@ -13,6 +13,22 @@ online serving layer (serve/diversity):
 these three; batched ingestion is bit-identical to a single pass because the
 scan branches only on ``st.n_seen``.
 
+The scan is *blocked*: each step consumes ``block_size`` points. One
+vectorized distance pass (``kernels.ops.block_center_dists``) plus a
+matroid-specific precheck classifies every point in the block as a no-op
+(within threshold of an existing center AND its HANDLE would not add a
+delegate) or as active; runs of no-ops are consumed with O(1) masked
+updates and only active points — center opens, delegate adds, restructures,
+the first two stream points, and anything within the distance kernel's
+error margin of a decision boundary — replay the exact per-point step.
+``block_size=1`` recovers the original per-point scan; both produce
+bit-identical states (asserted by the equivalence/property tests).
+
+``ingest_batch_sharded`` vmaps the same scan over a leading shard axis: per
+§3 composability (and the MapReduce formulation of arXiv:1605.05590),
+shards build coresets independently and compose by union — see
+``core/compose.py`` for the union/merge half.
+
 State (all static shapes; TCAP centers, SLOT delegate slots per center):
   R          scalar estimate (diameter for Alg. 2; radius for the variant)
   x1         first stream point (Alg. 2's anchor for the diameter estimate)
@@ -159,7 +175,11 @@ def _shrink(spec: MatroidSpec, k: int, st: StreamState, z):
 
 def _merge_delegates(spec, k, caps, st: StreamState, dead_mask):
     """Alg. 2 restructure merge: delegates of dropped centers are HANDLE'd
-    into their nearest surviving center."""
+    into their nearest surviving center.
+
+    The tcap*slot fori_loop runs only when some center actually died — a
+    filter pass that keeps every center (all-False ``dead_mask``) is a no-op
+    and must not pay the merge loop on the scan's steady-state steps."""
     tcap, slot_n = st.dv.shape
 
     def per_slot(i, st):
@@ -174,11 +194,12 @@ def _merge_delegates(spec, k, caps, st: StreamState, dead_mask):
 
         return jax.lax.cond(is_live_del, do, lambda s: s, st)
 
-    st = jax.lax.fori_loop(0, tcap * slot_n, per_slot, st)
-    # clear dropped centers' own buffers
-    return st._replace(
-        dv=st.dv & ~dead_mask[:, None],
-    )
+    def run_merge(st: StreamState) -> StreamState:
+        st = jax.lax.fori_loop(0, tcap * slot_n, per_slot, st)
+        # clear dropped centers' own buffers
+        return st._replace(dv=st.dv & ~dead_mask[:, None])
+
+    return jax.lax.cond(jnp.any(dead_mask), run_merge, lambda s: s, st)
 
 
 def _filter_centers(st: StreamState, thr):
@@ -249,35 +270,10 @@ def snapshot_coreset(st: StreamState) -> Coreset:
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("spec", "k", "tau", "variant", "c_const"),
-)
-def ingest_batch(
-    st0: StreamState,
-    points: jnp.ndarray,  # (n, d) metric-normalized stream order
-    cats: jnp.ndarray,  # (n, gamma)
-    valid: jnp.ndarray,  # (n,)
-    spec: MatroidSpec,
-    caps: Optional[jnp.ndarray],
-    k: int,
-    tau: int,
-    *,
-    base_index: jnp.ndarray = 0,  # global stream offset of points[0]
-    variant: str = "radius",  # "radius" (§5.2 tau-controlled) | "diameter" (Alg. 2)
-    eps: float = 0.5,
-    c_const: int = 32,
-) -> StreamState:
-    """Resume the jit'd Alg.-2 scan over one batch of the stream.
-
-    ``st0`` is ``init_stream_state(...)`` or the state returned by a previous
-    ``ingest_batch`` call; ``base_index`` offsets the delegates' ``src_idx``
-    so they stay global across batches. The scan branches on ``st.n_seen``,
-    so resuming mid-stream is exact: the concatenation of batches yields
-    bit-identical state to a single one-shot pass.
-    """
-    n, d = points.shape
-    caps_arr = caps if caps is not None else jnp.zeros((1,), jnp.int32)
+def _make_step(spec: MatroidSpec, k: int, tau: int, caps_arr, variant: str,
+               eps: float, c_const: int):
+    """Build the per-point Alg.-2 scan step (the bit-exact reference
+    semantics both the per-point and the blocked scans are defined by)."""
 
     def open_center(st: StreamState, x, xc, xsrc) -> StreamState:
         slot = jnp.argmin(st.cvalid)
@@ -376,9 +372,258 @@ def ingest_batch(
         )
         return st, None
 
-    src = jnp.asarray(base_index, jnp.int32) + jnp.arange(n, dtype=jnp.int32)
-    st, _ = jax.lax.scan(step, st0, (points, cats, src, valid.astype(bool)))
+    return step
+
+
+def _block_precheck(spec: MatroidSpec, k: int, caps_arr, variant: str,
+                    eps: float, c_const: int, st: StreamState,
+                    xb, xcb, vb):
+    """Vectorized would-this-point-change-state test for a block of points,
+    evaluated against the *current* state.
+
+    Returns (active bool[B], forced int32[B]). A point is active iff the
+    per-point step would do anything beyond incrementing ``n_seen`` (and, for
+    transversal, ``overflow``): open a center, add a delegate (incl. the
+    shrink that follows), trigger the diameter-variant R update, or fall
+    within the distance kernel's error margin of any of those decision
+    boundaries. Inactive valid points are exact no-ops whose only effect is
+    ``n_seen += 1`` and ``overflow += forced`` — the invariant the blocked
+    scan's bulk-skip relies on (state-unchanged induction along the block).
+    """
+    from ..kernels import ops as _ops
+
+    dists, margin = _ops.block_center_dists(xb, st.centers, st.cvalid)
+    tcap = st.centers.shape[0]
+    dmin = jnp.min(dists, axis=1)
+    z = jnp.argmin(dists, axis=1)
+    # near-tie in the nearest-center choice => the precheck's z may disagree
+    # with the exact path's; send those to the sequential fallback.
+    second = jnp.min(
+        jnp.where(jax.nn.one_hot(z, tcap, dtype=bool), _BIG, dists), axis=1
+    )
+    tie = (second - dmin) <= 2.0 * margin
+
+    if variant == "diameter":
+        thr_new = 2.0 * eps * st.R / (c_const * k)
+    else:
+        thr_new = 2.0 * st.R
+    opens = dmin > thr_new - margin
+
+    dvz = st.dv[z]  # (B, SLOT)
+    cnt = jnp.sum(dvz.astype(jnp.int32), axis=1)
+    has_room = ~jnp.all(dvz, axis=1)
+    if spec.kind == "uniform":
+        add = cnt < k
+        forced = jnp.zeros(xb.shape[0], jnp.int32)
+    elif spec.kind == "partition":
+        c = xcb[:, 0]
+        same = dvz & (st.dc[z][:, :, 0] == c[:, None])
+        add = (cnt < k) & (
+            jnp.sum(same.astype(jnp.int32), axis=1) < caps_arr[c]
+        )
+        forced = jnp.zeros(xb.shape[0], jnp.int32)
+    elif spec.kind == "transversal":
+        dcz = st.dc[z]  # (B, SLOT, gamma)
+        match = (dcz[:, :, :, None] == xcb[:, None, None, :]) & (
+            xcb[:, None, None, :] >= 0
+        )  # (B, SLOT, gamma, gamma_x)
+        holds = jnp.any(match, axis=2) & dvz[:, :, None]  # (B, SLOT, gamma_x)
+        cnts = jnp.sum(holds.astype(jnp.int32), axis=1)  # (B, gamma_x)
+        short = (cnts < k) & (xcb >= 0)
+        want = jnp.any(short, axis=1)
+        add = want & has_room
+        forced = (want & ~has_room).astype(jnp.int32)
+    else:  # pragma: no cover
+        raise ValueError(f"blocked scan not defined for {spec.kind!r}")
+    add = add & has_room
+
+    active = opens | add | tie
+    if variant == "diameter":
+        d1 = jnp.sqrt(
+            jnp.maximum(jnp.sum((xb - st.x1[None, :]) ** 2, axis=-1), 0.0)
+        )
+        active = active | (d1 > 2.0 * st.R - margin)
+    return active & vb, forced
+
+
+def _blocked_scan(step, spec: MatroidSpec, k: int, caps_arr, variant: str,
+                  eps: float, c_const: int, st0: StreamState,
+                  points, cats, src, valid, block_size: int) -> StreamState:
+    """Scan B points per step: one vectorized distance/precheck pass decides
+    which points could change state; runs of no-op points are consumed in
+    O(1) masked updates and only the (rare, in steady state) active points
+    replay the exact per-point step — bit-identical to the per-point scan."""
+    n, d = points.shape
+    B = block_size
+    pad = -n % B
+    if pad:
+        points = jnp.concatenate([points, jnp.zeros((pad, d), points.dtype)])
+        cats = jnp.concatenate(
+            [cats, jnp.full((pad, cats.shape[1]), -1, cats.dtype)]
+        )
+        src = jnp.concatenate([src, jnp.full((pad,), -1, jnp.int32)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+    nb = points.shape[0] // B
+    Pb = points.reshape(nb, B, d)
+    Cb = cats.reshape(nb, B, -1)
+    Sb = src.reshape(nb, B)
+    Vb = valid.reshape(nb, B)
+    idx = jnp.arange(B, dtype=jnp.int32)
+
+    def block_step(st: StreamState, inp):
+        xb, xcb, srcb, vb = inp
+
+        def cond(carry):
+            return carry[1] < B
+
+        def body(carry):
+            st, i = carry
+            active, forced = _block_precheck(
+                spec, k, caps_arr, variant, eps, c_const, st, xb, xcb, vb
+            )
+            rem = idx >= i
+            # the first two (valid) stream points take special branches
+            vrem = vb & rem
+            excl = jnp.cumsum(vrem.astype(jnp.int32)) - vrem.astype(jnp.int32)
+            active = active | (vrem & (st.n_seen + excl < 2))
+            act = active & rem
+            f = jnp.where(jnp.any(act), jnp.argmax(act), B).astype(jnp.int32)
+            skip = vrem & (idx < f)
+            st = st._replace(
+                n_seen=st.n_seen + jnp.sum(skip.astype(jnp.int32)),
+                overflow=st.overflow + jnp.sum(jnp.where(skip, forced, 0)),
+            )
+            fs = jnp.minimum(f, B - 1)  # clamped gather; guarded by f < B
+
+            def do_point(st: StreamState) -> StreamState:
+                return step(st, (xb[fs], xcb[fs], srcb[fs], vb[fs]))[0]
+
+            st = jax.lax.cond(f < B, do_point, lambda s: s, st)
+            return st, f + 1
+
+        st, _ = jax.lax.while_loop(cond, body, (st, jnp.int32(0)))
+        return st, None
+
+    st, _ = jax.lax.scan(block_step, st0, (Pb, Cb, Sb, Vb))
     return st
+
+
+def _ingest_core(st0: StreamState, points, cats, valid, src,
+                 spec: MatroidSpec, caps_arr, k: int, tau: int,
+                 variant: str, eps: float, c_const: int,
+                 block_size: int) -> StreamState:
+    step = _make_step(spec, k, tau, caps_arr, variant, eps, c_const)
+    valid = valid.astype(bool)
+    if block_size <= 1:
+        st, _ = jax.lax.scan(step, st0, (points, cats, src, valid))
+        return st
+    return _blocked_scan(
+        step, spec, k, caps_arr, variant, eps, c_const,
+        st0, points, cats, src, valid, block_size,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "k", "tau", "variant", "c_const", "block_size"),
+)
+def ingest_batch(
+    st0: StreamState,
+    points: jnp.ndarray,  # (n, d) metric-normalized stream order
+    cats: jnp.ndarray,  # (n, gamma)
+    valid: jnp.ndarray,  # (n,)
+    spec: MatroidSpec,
+    caps: Optional[jnp.ndarray],
+    k: int,
+    tau: int,
+    *,
+    base_index: jnp.ndarray = 0,  # global stream offset of points[0]
+    variant: str = "radius",  # "radius" (§5.2 tau-controlled) | "diameter" (Alg. 2)
+    eps: float = 0.5,
+    c_const: int = 32,
+    block_size: int = 128,
+    src: Optional[jnp.ndarray] = None,  # explicit global indices (overrides
+                                        # base_index + arange; compose path)
+) -> StreamState:
+    """Resume the jit'd Alg.-2 scan over one batch of the stream.
+
+    ``st0`` is ``init_stream_state(...)`` or the state returned by a previous
+    ``ingest_batch`` call; ``base_index`` offsets the delegates' ``src_idx``
+    so they stay global across batches. The scan branches on ``st.n_seen``,
+    so resuming mid-stream is exact: the concatenation of batches yields
+    bit-identical state to a single one-shot pass.
+
+    ``block_size`` > 1 selects the blocked scan (B points per step; the
+    vectorized precheck bulk-skips no-op points and replays only state-
+    changing ones through the per-point step) — bit-identical to
+    ``block_size=1`` by construction; the equivalence tests parameterize
+    over both.
+    """
+    n, _ = points.shape
+    caps_arr = caps if caps is not None else jnp.zeros((1,), jnp.int32)
+    if src is None:
+        src = jnp.asarray(base_index, jnp.int32) + jnp.arange(
+            n, dtype=jnp.int32
+        )
+    else:
+        src = jnp.asarray(src, jnp.int32)
+    return _ingest_core(
+        st0, points, cats, valid, src, spec, caps_arr, k, tau,
+        variant, eps, c_const, block_size,
+    )
+
+
+def init_sharded_states(
+    num_shards: int,
+    d: int,
+    gamma: int,
+    spec: MatroidSpec,
+    k: int,
+    tau: int,
+    *,
+    slot_cap: Optional[int] = None,
+) -> StreamState:
+    """Stacked pytree of ``num_shards`` empty stream states (leading shard
+    axis on every leaf) — the carry for ``ingest_batch_sharded``."""
+    st = init_stream_state(d, gamma, spec, k, tau, slot_cap=slot_cap)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (num_shards,) + x.shape), st
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "k", "tau", "variant", "c_const", "block_size"),
+)
+def ingest_batch_sharded(
+    sts: StreamState,  # stacked: every leaf has leading shard axis S
+    points: jnp.ndarray,  # (S, m, d)
+    cats: jnp.ndarray,  # (S, m, gamma)
+    valid: jnp.ndarray,  # (S, m)
+    src: jnp.ndarray,  # (S, m) global stream indices
+    spec: MatroidSpec,
+    caps: Optional[jnp.ndarray],
+    k: int,
+    tau: int,
+    *,
+    variant: str = "radius",
+    eps: float = 0.5,
+    c_const: int = 32,
+    block_size: int = 128,
+) -> StreamState:
+    """vmapped blocked ingestion: every shard runs its own independent
+    Alg.-2 scan (paper §3 / the MapReduce formulation: coresets of a
+    partition compose by union). Per-shard results are bit-identical to
+    running ``ingest_batch`` on that shard's sub-stream alone."""
+    caps_arr = caps if caps is not None else jnp.zeros((1,), jnp.int32)
+
+    def one(st, p, c, v, s):
+        return _ingest_core(
+            st, p, c, v, s, spec, caps_arr, k, tau,
+            variant, eps, c_const, block_size,
+        )
+
+    return jax.vmap(one)(sts, points, cats, valid.astype(bool), src)
 
 
 def stream_coreset(
@@ -394,14 +639,20 @@ def stream_coreset(
     variant: str = "radius",  # "radius" (§5.2 tau-controlled) | "diameter" (Alg. 2)
     eps: float = 0.5,
     c_const: int = 32,
+    block_size: int = 1,
 ) -> tuple[Coreset, StreamState]:
-    """One-pass streaming coreset: init + single ingest_batch + snapshot."""
+    """One-pass streaming coreset: init + single ingest_batch + snapshot.
+
+    Defaults to the per-point scan: a one-shot offline pass pays the blocked
+    graph's larger compile without amortizing it over repeated calls (the
+    serving layer, which does amortize, opts into ``block_size=128``).
+    """
     n, d = points.shape
     gamma = cats.shape[1]
     st0 = init_stream_state(d, gamma, spec, k, tau, slot_cap=slot_cap)
     st = ingest_batch(
         st0, points, cats, valid, spec, caps, k, tau,
-        variant=variant, eps=eps, c_const=c_const,
+        variant=variant, eps=eps, c_const=c_const, block_size=block_size,
     )
     return snapshot_coreset(st), st
 

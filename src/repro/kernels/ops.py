@@ -42,6 +42,42 @@ def pairwise_dist(x, y, *, force: Optional[str] = None):
     return jnp.sqrt(pairwise_sqdist(x, y, force=force))
 
 
+_F32_MAX = jnp.float32(jnp.finfo(jnp.float32).max)
+
+
+def block_center_dists(block, centers, cvalid, *, force: Optional[str] = None):
+    """Fused block-of-points x center-buffer distances for the blocked scan.
+
+    (B, d), (T, d), (T,) -> ((B, T) Euclidean distances with invalid centers
+    masked to float32 max, scalar error margin).
+
+    The ref path reproduces ``core.streaming._dists_to_centers`` bit for bit
+    (broadcast diff / square / sum / sqrt, so the blocked scan's precheck is
+    *exactly* the per-point arithmetic) and reports margin 0. The Pallas path
+    routes through the matmul-form pdist kernel, whose cancellation error is
+    bounded by the returned margin — callers must treat any comparison that
+    lands within the margin as undecided and fall back to the exact path.
+    """
+    m = _mode(force)
+    if m == "ref":
+        diff = centers[None, :, :] - block[:, None, :]
+        d2 = jnp.sum(diff * diff, axis=-1)
+        d = jnp.sqrt(jnp.maximum(d2, 0.0))
+        margin = jnp.float32(0.0)
+    else:
+        d2 = _pdist.pairwise_sqdist(
+            block, centers, interpret=(m == "interpret")
+        )
+        d = jnp.sqrt(d2)
+        # matmul-form ||x||^2+||y||^2-2x.y loses ~eps * (||x||^2+||y||^2)
+        # to cancellation; bound it by the largest operand norms in play.
+        scale = jnp.max(jnp.sum(block * block, axis=-1)) + jnp.max(
+            jnp.where(cvalid, jnp.sum(centers * centers, axis=-1), 0.0)
+        )
+        margin = jnp.sqrt(jnp.float32(1e-5) * jnp.maximum(scale, 1e-12))
+    return jnp.where(cvalid[None, :], d, _F32_MAX), margin
+
+
 def gmm_update(x, z, min_dist, valid, *, force: Optional[str] = None):
     """Fused GMM step: (new_min, far_idx, far_val). See kernels/gmm_step.py."""
     m = _mode(force)

@@ -8,12 +8,19 @@ ingestion that leaves the coreset unchanged (the common steady-state case:
 most stream points become non-delegates) keeps the matrix warm; the entry is
 rebuilt only when the coreset actually changed.
 
+Many services (tenants) may share one ``DistanceCache`` — one entry per
+``(spec, tau, metric)`` key — so the cache is bounded: ``max_entries`` caps
+the entry count with least-recently-used eviction (per-key last-use
+ordering) and ``ttl_s`` expires entries that have not been *rebuilt* within
+the window, whichever comes first. Both are off by default.
+
 ``CacheStats`` is the observability hook the tests and serve_bench use to
 assert "no pdist recomputation on the warm path".
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, NamedTuple, Optional
 
 import numpy as np
@@ -37,6 +44,8 @@ class CoresetEntry:
     src_idx: np.ndarray  # int64[m] global stream indices
     D: np.ndarray  # f32[m, m] pairwise Euclidean distances
     fingerprint: int
+    built_at: float = 0.0  # clock() at build time (TTL anchor)
+    last_use: float = 0.0  # clock() at last lookup hit (LRU ordering)
 
     @property
     def size(self) -> int:
@@ -49,6 +58,8 @@ class CacheStats:
     misses: int = 0
     builds: int = 0  # pdist matrix constructions (the expensive part)
     invalidations: int = 0
+    evictions: int = 0  # max_entries LRU evictions
+    expirations: int = 0  # TTL expiries
 
 
 def coreset_fingerprint(valid: np.ndarray, src_idx: np.ndarray) -> int:
@@ -58,20 +69,49 @@ def coreset_fingerprint(valid: np.ndarray, src_idx: np.ndarray) -> int:
 
 
 class DistanceCache:
-    """Maps CacheKey -> CoresetEntry, invalidating on fingerprint change."""
+    """Maps CacheKey -> CoresetEntry, invalidating on fingerprint change,
+    with optional max-entries LRU eviction and per-entry TTL expiry."""
 
     def __init__(
         self,
         build_fn: Callable[[np.ndarray], np.ndarray] = coreset_distance_matrix,
+        *,
+        max_entries: Optional[int] = None,
+        ttl_s: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
     ):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self._build_fn = build_fn
         self._entries: dict[CacheKey, CoresetEntry] = {}
+        self.max_entries = max_entries
+        self.ttl_s = ttl_s
+        self._clock = clock
         self.stats = CacheStats()
+
+    def _expired(self, e: CoresetEntry) -> bool:
+        return (
+            self.ttl_s is not None
+            and self._clock() - e.built_at > self.ttl_s
+        )
+
+    def _sweep_expired(self) -> None:
+        """Drop every expired entry — without this, a ttl_s-only cache would
+        keep abandoned tenants' O(m^2) matrices forever, since per-key
+        expiry in lookup() only fires for keys that are queried again."""
+        for k in [k for k, e in self._entries.items() if self._expired(e)]:
+            del self._entries[k]
+            self.stats.expirations += 1
 
     def lookup(self, key: CacheKey, fingerprint: int) -> Optional[CoresetEntry]:
         e = self._entries.get(key)
+        if e is not None and self._expired(e):
+            self.stats.expirations += 1
+            del self._entries[key]
+            e = None
         if e is not None and e.fingerprint == fingerprint:
             self.stats.hits += 1
+            e.last_use = self._clock()
             return e
         if e is not None:
             self.stats.invalidations += 1
@@ -89,11 +129,18 @@ class DistanceCache:
     ) -> CoresetEntry:
         D = self._build_fn(points)
         self.stats.builds += 1
+        self._sweep_expired()
+        now = self._clock()
         e = CoresetEntry(
             points=points, cats=cats, src_idx=src_idx, D=D,
-            fingerprint=fingerprint,
+            fingerprint=fingerprint, built_at=now, last_use=now,
         )
         self._entries[key] = e
+        if self.max_entries is not None:
+            while len(self._entries) > self.max_entries:
+                lru = min(self._entries, key=lambda k: self._entries[k].last_use)
+                del self._entries[lru]
+                self.stats.evictions += 1
         return e
 
     def invalidate(self, key: CacheKey) -> None:

@@ -4,8 +4,11 @@ Serving state is exactly what the paper says to keep (§4.4, §5.2): the
 resumable streaming-scan state (``core.streaming.StreamState``) and the small
 (1-eps)-coreset it induces. Queries never touch the raw stream:
 
-  ingest     resume the jit'd Alg.-2 scan over each arriving batch
-             (``ingest_batch``), with global ``src_idx`` bookkeeping;
+  ingest     resume the jit'd blocked Alg.-2 scan over each arriving batch
+             (``ingest_batch``), with global ``src_idx`` bookkeeping; with
+             ``num_shards > 1`` the batch is dealt round-robin across
+             independent per-shard scan states (one vmapped call,
+             ``ingest_batch_sharded``) whose coresets compose by union (§3);
   cache      the compacted coreset + its pairwise distance matrix live in a
              ``DistanceCache`` keyed by (MatroidSpec, tau, metric) and a
              content fingerprint — ingestion that does not change the
@@ -25,11 +28,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core import geometry
+from ...core.compose import compact_coreset, snapshot_shards
 from ...core.final_solve import SubsetMatroidView, final_solve
 from ...core.matroid import MatroidSpec, make_host_matroid
 from ...core.streaming import (
     StreamState,
     ingest_batch,
+    ingest_batch_sharded,
+    init_sharded_states,
     init_stream_state,
     snapshot_coreset,
 )
@@ -68,11 +74,15 @@ class DiversityService:
         c_const: int = 32,
         oracle=None,
         cache: Optional[DistanceCache] = None,
+        num_shards: int = 1,
+        block_size: int = 128,
     ):
         if spec.kind == "general" and oracle is None:
             raise ValueError("general matroid service needs a host oracle")
         if spec.kind == "partition" and caps is None:
             raise ValueError("partition matroid service needs per-category caps")
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         self.spec = spec
         self.k = int(k)
         self.tau = int(tau)
@@ -84,9 +94,11 @@ class DiversityService:
         self.eps = float(eps)
         self.c_const = int(c_const)
         self.oracle = oracle
+        self.num_shards = int(num_shards)
+        self.block_size = int(block_size)
         self.cache = cache if cache is not None else DistanceCache()
         self.cache_key = CacheKey(spec=spec, tau=self.tau, metric=str(metric))
-        self._state: Optional[StreamState] = None
+        self._state: Optional[StreamState] = None  # single-shard OR stacked
         self._gamma_width = max(spec.gamma, 1)
         self.n_offered = 0
         self._fingerprint: Optional[int] = None
@@ -99,27 +111,47 @@ class DiversityService:
     def state(self) -> Optional[StreamState]:
         return self._state
 
-    def ingest(
-        self, points: np.ndarray, cats: Optional[np.ndarray] = None
-    ) -> IngestReport:
-        """Feed one batch of the stream (any size) into the scan state."""
-        t0 = time.perf_counter()
-        pts = np.asarray(points, np.float32)
-        n, d = pts.shape
+    def _check_cats(self, n: int, cats: Optional[np.ndarray]) -> np.ndarray:
         if cats is None:
-            cats_arr = np.zeros((n, self._gamma_width), np.int32)
-        else:
-            cats_arr = np.asarray(cats, np.int32).reshape(n, -1)
+            return np.zeros((n, self._gamma_width), np.int32)
+        cats_arr = np.asarray(cats, np.int32).reshape(n, -1)
         if cats_arr.shape[1] != self._gamma_width:
             raise ValueError(
                 f"cats width {cats_arr.shape[1]} != spec gamma "
                 f"{self._gamma_width}"
             )
+        return cats_arr
+
+    def ingest(
+        self, points: np.ndarray, cats: Optional[np.ndarray] = None
+    ) -> IngestReport:
+        """Feed one batch of the stream (any size) into the scan state.
+
+        With ``num_shards > 1`` the batch is dealt round-robin across the
+        per-shard scan states (``ingest_sharded``); otherwise it resumes the
+        single blocked scan. Either way batches are padded to a multiple of
+        ``block_size`` with invalid rows — a bit-exact no-op for the scan
+        that keeps the jit cache keyed on a handful of bucketed shapes
+        instead of recompiling for every ragged final batch.
+        """
+        if self.num_shards > 1:
+            return self.ingest_sharded(points, cats)
+        t0 = time.perf_counter()
+        pts = np.asarray(points, np.float32)
+        n, d = pts.shape
+        cats_arr = self._check_cats(n, cats)
         if self._state is None:
             self._state = init_stream_state(
                 d, self._gamma_width, self.spec, self.k, self.tau,
                 slot_cap=self.slot_cap,
             )
+        pad = -n % self.block_size
+        if pad:
+            pts = np.concatenate([pts, np.zeros((pad, d), np.float32)])
+            cats_arr = np.concatenate(
+                [cats_arr, np.full((pad, self._gamma_width), -1, np.int32)]
+            )
+        valid = np.arange(n + pad) < n
         pts_norm = geometry.normalize_for_metric(
             jnp.asarray(pts, jnp.float32), self.metric
         )
@@ -127,7 +159,7 @@ class DiversityService:
             self._state,
             pts_norm,
             jnp.asarray(cats_arr),
-            jnp.ones((n,), bool),
+            jnp.asarray(valid),
             self.spec,
             self._caps_j,
             self.k,
@@ -136,36 +168,113 @@ class DiversityService:
             variant=self.stream_variant,
             eps=self.eps,
             c_const=self.c_const,
+            block_size=self.block_size,
         )
         self.n_offered += n
-        # fingerprint from the (small) valid/src buffers only — the point
-        # buffer is pulled to host lazily, on a cache miss in _entry()
-        cs = snapshot_coreset(self._state)
-        valid = np.asarray(cs.valid)
-        src_c = np.asarray(cs.src_idx)[valid].astype(np.int64)
-        fp = coreset_fingerprint(valid, src_c)
+        return self._report(n, t0)
+
+    def ingest_sharded(
+        self, points: np.ndarray, cats: Optional[np.ndarray] = None
+    ) -> IngestReport:
+        """Deal one batch round-robin across ``num_shards`` independent
+        scan states and ingest all shards in one vmapped call.
+
+        Each shard sees its own sub-stream; per §3 composability the union
+        of the per-shard coresets (``snapshot``) is a coreset of the full
+        stream. Global ``src_idx`` bookkeeping is preserved by passing
+        explicit per-row indices.
+        """
+        if self.num_shards < 2:
+            raise ValueError("ingest_sharded needs num_shards >= 2")
+        t0 = time.perf_counter()
+        pts = np.asarray(points, np.float32)
+        n, d = pts.shape
+        cats_arr = self._check_cats(n, cats)
+        S = self.num_shards
+        if self._state is None:
+            self._state = init_sharded_states(
+                S, d, self._gamma_width, self.spec, self.k, self.tau,
+                slot_cap=self.slot_cap,
+            )
+        if str(self.metric) == "euclidean":
+            pts_norm = pts  # identity metric: skip the device round-trip
+        else:
+            pts_norm = np.asarray(
+                geometry.normalize_for_metric(
+                    jnp.asarray(pts, jnp.float32), self.metric
+                )
+            )
+        mm = -(-n // S)
+        mm += -mm % self.block_size  # bucket the per-shard length too
+        Pb = np.zeros((S, mm, d), np.float32)
+        Cb = np.full((S, mm, self._gamma_width), -1, np.int32)
+        Vb = np.zeros((S, mm), bool)
+        Sb = np.full((S, mm), -1, np.int32)
+        for s in range(S):
+            rows = np.arange(s, n, S)
+            r = rows.shape[0]
+            Pb[s, :r] = pts_norm[rows]
+            Cb[s, :r] = cats_arr[rows]
+            Vb[s, :r] = True
+            Sb[s, :r] = self.n_offered + rows
+        self._state = ingest_batch_sharded(
+            self._state,
+            jnp.asarray(Pb),
+            jnp.asarray(Cb),
+            jnp.asarray(Vb),
+            jnp.asarray(Sb),
+            self.spec,
+            self._caps_j,
+            self.k,
+            self.tau,
+            variant=self.stream_variant,
+            eps=self.eps,
+            c_const=self.c_const,
+            block_size=self.block_size,
+        )
+        self.n_offered += n
+        return self._report(n, t0)
+
+    def _report(self, n: int, t0: float) -> IngestReport:
+        fp, size = self._fingerprint_and_size()
         changed = fp != self._fingerprint
         self._fingerprint = fp
         return IngestReport(
             n=n,
             total=self.n_offered,
-            coreset_size=int(src_c.shape[0]),
+            coreset_size=size,
             coreset_changed=changed,
             ingest_s=time.perf_counter() - t0,
         )
 
+    def _fingerprint_and_size(self) -> tuple[int, int]:
+        """Coreset fingerprint straight from the raw state buffers.
+
+        The coreset is determined by (per-center validity, delegate validity,
+        delegate src ids); hashing those three small host pulls avoids the
+        eager ``snapshot_coreset`` graph on every ingest — the hot serving
+        path. Row order matches ``snapshot``/``snapshot_shards``, and for a
+        single shard the value is identical to the old snapshot-based hash.
+        """
+        st = self._state
+        dv = np.asarray(st.dv)
+        cv = np.asarray(st.cvalid)
+        ds = np.asarray(st.ds)
+        valid = dv & cv[..., None]
+        src = ds[valid].astype(np.int64)  # row-major == shard-major order
+        return coreset_fingerprint(valid.reshape(-1), src), int(src.shape[0])
+
     def snapshot(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Compacted current coreset (points, cats, src_idx), buffer order —
-        identical row order to ``solve_dmmc(..., setting='streaming')``."""
+        identical row order to ``solve_dmmc(..., setting='streaming')`` for a
+        single shard; the shard-major union (§3) when sharded."""
         if self._state is None:
             raise RuntimeError("ingest at least one batch first")
-        cs = snapshot_coreset(self._state)
-        valid = np.asarray(cs.valid)
-        return (
-            np.asarray(cs.points)[valid],
-            np.asarray(cs.cats)[valid],
-            np.asarray(cs.src_idx)[valid].astype(np.int64),
-        )
+        if self.num_shards > 1:
+            cs = snapshot_shards(self._state)
+        else:
+            cs = snapshot_coreset(self._state)
+        return compact_coreset(cs)
 
     # ------------------------------------------------------------------
     # cached distance matrix

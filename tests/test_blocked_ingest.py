@@ -1,0 +1,143 @@
+"""Blocked-scan equivalence: blocked ingestion == per-point ingestion,
+bit for bit, across block sizes, shard counts, and all three jit matroid
+kinds (including the transversal add+shrink path).
+
+This deterministic sweep always runs; the hypothesis property test over
+random instances/splits lives in test_blocked_ingest_property.py (a
+module-level importorskip skips its whole module when hypothesis is
+missing — keeping it separate preserves this sweep).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from conftest import make_clustered_points
+from repro.core.matroid import MatroidSpec
+from repro.core.streaming import (
+    ingest_batch,
+    ingest_batch_sharded,
+    init_sharded_states,
+    init_stream_state,
+)
+
+BLOCKS = [1, 3, 16, 50]
+
+
+def _instance(kind, seed, n):
+    rng = np.random.default_rng(seed)
+    P = make_clustered_points(rng, n=n, d=4, centers=4, spread=0.08)
+    if kind == "uniform":
+        cats = np.zeros((n, 1), np.int32)
+        return P, cats, None, MatroidSpec("uniform"), 3
+    if kind == "partition":
+        h = 3
+        cats = rng.integers(0, h, (n, 1)).astype(np.int32)
+        caps = np.full(h, 2, np.int32)
+        return P, cats, caps, MatroidSpec(
+            "partition", num_categories=h, gamma=1
+        ), 3
+    h, gamma = 3, 2
+    cats = np.full((n, gamma), -1, np.int32)
+    cats[:, 0] = rng.integers(0, h, n)
+    extra = rng.random(n) < 0.5
+    cats[extra, 1] = rng.integers(0, h, extra.sum())
+    # k=2 with dense clusters: delegate adds trigger the greedy-matching
+    # shrink, so the equivalence covers the transversal shrink path too
+    return P, cats, None, MatroidSpec(
+        "transversal", num_categories=h, gamma=gamma
+    ), 2
+
+
+def _ingest(P, cats, caps, spec, k, tau, block_size, splits):
+    caps_j = None if caps is None else jnp.asarray(caps, jnp.int32)
+    st = init_stream_state(P.shape[1], cats.shape[1], spec, k, tau)
+    off = 0
+    for b in splits:
+        st = ingest_batch(
+            st, jnp.asarray(P[off:off + b]), jnp.asarray(cats[off:off + b]),
+            jnp.ones((b,), bool), spec, caps_j, k, tau, base_index=off,
+            block_size=block_size,
+        )
+        off += b
+    assert off == P.shape[0]
+    return st
+
+
+def _assert_states_equal(a, b, label):
+    for f in a._fields:
+        assert np.array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        ), f"{label}: field {f} diverged"
+
+
+@pytest.mark.parametrize("kind", ["uniform", "partition", "transversal"])
+def test_blocked_equals_per_point_sweep(kind):
+    n, tau = 150, 8
+    P, cats, caps, spec, k = _instance(kind, seed=0, n=n)
+    ref = _ingest(P, cats, caps, spec, k, tau, 1, [n])
+    for bs in BLOCKS[1:]:
+        st = _ingest(P, cats, caps, spec, k, tau, bs, [n])
+        _assert_states_equal(ref, st, f"{kind} block={bs} one-shot")
+    # ragged batch splits resume mid-block
+    st = _ingest(P, cats, caps, spec, k, tau, 16, [47, 30, 73])
+    _assert_states_equal(ref, st, f"{kind} block=16 split")
+
+
+@pytest.mark.parametrize("block_size", [16, 50])
+def test_blocked_equals_per_point_diameter_variant(block_size):
+    """The Alg.-2 diameter variant has its own precheck arm (thr_new and
+    the d1 > 2R restructure trigger) — assert bit-identity there too."""
+    n, tau = 150, 8
+    P, cats, caps, spec, k = _instance("partition", seed=2, n=n)
+    caps_j = jnp.asarray(caps, jnp.int32)
+
+    def run(bs):
+        st = init_stream_state(P.shape[1], 1, spec, k, tau)
+        return ingest_batch(
+            st, jnp.asarray(P), jnp.asarray(cats), jnp.ones((n,), bool),
+            spec, caps_j, k, tau, variant="diameter", block_size=bs,
+        )
+
+    _assert_states_equal(run(1), run(block_size),
+                         f"diameter block={block_size}")
+
+
+@pytest.mark.parametrize("kind", ["uniform", "partition", "transversal"])
+@pytest.mark.parametrize("num_shards", [2, 4])
+def test_sharded_equals_per_shard_scans(kind, num_shards):
+    n, tau, bs = 120, 8, 16
+    P, cats, caps, spec, k = _instance(kind, seed=1, n=n)
+    caps_j = None if caps is None else jnp.asarray(caps, jnp.int32)
+    S = num_shards
+    d, gamma = P.shape[1], cats.shape[1]
+    mm = -(-n // S)
+    Pb = np.zeros((S, mm, d), np.float32)
+    Cb = np.full((S, mm, gamma), -1, np.int32)
+    Vb = np.zeros((S, mm), bool)
+    Sb = np.full((S, mm), -1, np.int32)
+    for s in range(S):
+        rows = np.arange(s, n, S)
+        r = len(rows)
+        Pb[s, :r] = P[rows]
+        Cb[s, :r] = cats[rows]
+        Vb[s, :r] = True
+        Sb[s, :r] = rows
+    sts = ingest_batch_sharded(
+        init_sharded_states(S, d, gamma, spec, k, tau),
+        jnp.asarray(Pb), jnp.asarray(Cb), jnp.asarray(Vb), jnp.asarray(Sb),
+        spec, caps_j, k, tau, block_size=bs,
+    )
+    for s in range(S):
+        rows = np.arange(s, n, S)
+        ref = init_stream_state(d, gamma, spec, k, tau)
+        ref = ingest_batch(
+            ref, jnp.asarray(P[rows]), jnp.asarray(cats[rows]),
+            jnp.ones((len(rows),), bool), spec, caps_j, k, tau,
+            src=jnp.asarray(rows, jnp.int32), block_size=1,
+        )
+        import jax
+
+        shard = jax.tree_util.tree_map(lambda x, s=s: x[s], sts)
+        _assert_states_equal(ref, shard, f"{kind} shard {s}/{S}")
+
+

@@ -1,0 +1,90 @@
+"""Hypothesis property test: blocked ingestion == per-point ingestion over
+random instances, batch splits, block sizes, shard counts, and all three
+jit matroid kinds.
+
+Kept separate from the always-running deterministic sweep
+(test_blocked_ingest.py) because the module-level importorskip below skips
+this whole module when hypothesis is missing (requirements-dev.txt).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st
+
+from test_blocked_ingest import (
+    BLOCKS,
+    _assert_states_equal,
+    _ingest,
+    _instance,
+)
+from repro.core.streaming import (
+    ingest_batch,
+    ingest_batch_sharded,
+    init_sharded_states,
+    init_stream_state,
+)
+
+# block sizes / shard counts come from small fixed menus so the jit cache is
+# reused across examples (block_size is a static argument)
+ingest_cases = st.tuples(
+    st.sampled_from(["uniform", "partition", "transversal"]),
+    st.sampled_from(BLOCKS[1:]),  # block size under test
+    st.sampled_from([2, 3]),  # shard count
+    st.integers(0, 10_000),  # instance seed
+    st.integers(60, 120),  # n
+)
+
+
+@settings(max_examples=8, deadline=None)
+@given(ingest_cases)
+def test_blocked_and_sharded_equal_per_point_property(case):
+    kind, bs, S, seed, n = case
+    P, cats, caps, spec, k = _instance(kind, seed=seed, n=n)
+    tau = 8
+    rng = np.random.default_rng(seed + 1)
+    # random batch split of the stream
+    splits = []
+    left = n
+    while left > 0:
+        b = int(rng.integers(1, left + 1))
+        splits.append(b)
+        left -= b
+    ref = _ingest(P, cats, caps, spec, k, tau, 1, [n])
+    st_blocked = _ingest(P, cats, caps, spec, k, tau, bs, splits)
+    _assert_states_equal(ref, st_blocked, f"{kind} bs={bs} splits={splits}")
+    # sharded: every shard bit-identical to its own per-point sub-stream
+    caps_j = None if caps is None else jnp.asarray(caps, jnp.int32)
+    d, gamma = P.shape[1], cats.shape[1]
+    mm = -(-n // S)
+    Pb = np.zeros((S, mm, d), np.float32)
+    Cb = np.full((S, mm, gamma), -1, np.int32)
+    Vb = np.zeros((S, mm), bool)
+    Sb = np.full((S, mm), -1, np.int32)
+    for s in range(S):
+        rows = np.arange(s, n, S)
+        r = len(rows)
+        Pb[s, :r] = P[rows]
+        Cb[s, :r] = cats[rows]
+        Vb[s, :r] = True
+        Sb[s, :r] = rows
+    sts = ingest_batch_sharded(
+        init_sharded_states(S, d, gamma, spec, k, tau),
+        jnp.asarray(Pb), jnp.asarray(Cb), jnp.asarray(Vb), jnp.asarray(Sb),
+        spec, caps_j, k, tau, block_size=bs,
+    )
+    import jax
+
+    for s in range(S):
+        rows = np.arange(s, n, S)
+        ref_s = init_stream_state(d, gamma, spec, k, tau)
+        ref_s = ingest_batch(
+            ref_s, jnp.asarray(P[rows]), jnp.asarray(cats[rows]),
+            jnp.ones((len(rows),), bool), spec, caps_j, k, tau,
+            src=jnp.asarray(rows, jnp.int32), block_size=1,
+        )
+        shard = jax.tree_util.tree_map(lambda x, s=s: x[s], sts)
+        _assert_states_equal(ref_s, shard, f"{kind} S={S} shard {s}")

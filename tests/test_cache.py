@@ -1,0 +1,103 @@
+"""DistanceCache bounds: max-entries LRU eviction + TTL expiry (the
+multi-tenant prerequisite — many (spec, tau, metric) keys, one cache)."""
+import numpy as np
+import pytest
+
+from repro.core.matroid import MatroidSpec
+from repro.serve.diversity.cache import CacheKey, DistanceCache
+
+
+def _key(tau):
+    return CacheKey(spec=MatroidSpec("uniform"), tau=tau, metric="euclidean")
+
+
+def _build(cache, key, fp=0, m=4):
+    pts = np.arange(m * 2, dtype=np.float32).reshape(m, 2)
+    cats = np.zeros((m, 1), np.int32)
+    src = np.arange(m, dtype=np.int64)
+    return cache.build(key, pts, cats, src, fp)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_lru_eviction_keeps_recently_used():
+    clock = FakeClock()
+    cache = DistanceCache(
+        build_fn=lambda p: np.zeros((p.shape[0],) * 2, np.float32),
+        max_entries=2, clock=clock,
+    )
+    _build(cache, _key(1))
+    clock.t = 1.0
+    _build(cache, _key(2))
+    clock.t = 2.0
+    assert cache.lookup(_key(1), 0) is not None  # key 1 now most recent
+    clock.t = 3.0
+    _build(cache, _key(3))  # exceeds max_entries=2 -> evicts LRU = key 2
+    assert len(cache) == 2
+    assert cache.stats.evictions == 1
+    assert cache.lookup(_key(2), 0) is None
+    assert cache.lookup(_key(1), 0) is not None
+    assert cache.lookup(_key(3), 0) is not None
+
+
+def test_ttl_sweeps_abandoned_keys_on_build():
+    """A ttl_s-only cache must reclaim entries for keys never queried again
+    (abandoned tenants), not just keys that hit lookup() after expiry."""
+    clock = FakeClock()
+    cache = DistanceCache(
+        build_fn=lambda p: np.zeros((p.shape[0],) * 2, np.float32),
+        ttl_s=10.0, clock=clock,
+    )
+    _build(cache, _key(1))  # tenant 1 builds, then goes silent
+    clock.t = 20.0
+    _build(cache, _key(2))  # any other tenant's build sweeps the expired one
+    assert len(cache) == 1
+    assert cache.stats.expirations == 1
+    assert cache.lookup(_key(2), 0) is not None
+
+
+def test_ttl_expiry_forces_rebuild():
+    clock = FakeClock()
+    cache = DistanceCache(
+        build_fn=lambda p: np.zeros((p.shape[0],) * 2, np.float32),
+        ttl_s=10.0, clock=clock,
+    )
+    _build(cache, _key(1))
+    clock.t = 9.0
+    assert cache.lookup(_key(1), 0) is not None  # within TTL
+    clock.t = 11.0
+    assert cache.lookup(_key(1), 0) is None  # expired
+    assert cache.stats.expirations == 1
+    assert len(cache) == 0
+    _build(cache, _key(1))  # rebuild resets the TTL anchor
+    clock.t = 20.0
+    assert cache.lookup(_key(1), 0) is not None
+
+
+def test_unbounded_by_default_and_validation():
+    cache = DistanceCache(
+        build_fn=lambda p: np.zeros((p.shape[0],) * 2, np.float32)
+    )
+    for tau in range(10):
+        _build(cache, _key(tau))
+    assert len(cache) == 10 and cache.stats.evictions == 0
+    with pytest.raises(ValueError):
+        DistanceCache(max_entries=0)
+
+
+def test_fingerprint_mismatch_still_invalidates():
+    clock = FakeClock()
+    cache = DistanceCache(
+        build_fn=lambda p: np.zeros((p.shape[0],) * 2, np.float32),
+        max_entries=4, ttl_s=100.0, clock=clock,
+    )
+    _build(cache, _key(1), fp=7)
+    assert cache.lookup(_key(1), 7) is not None
+    assert cache.lookup(_key(1), 8) is None  # coreset changed
+    assert cache.stats.invalidations == 1

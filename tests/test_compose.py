@@ -1,0 +1,128 @@
+"""Coreset composition (§3): union of per-shard coresets, shard snapshot,
+and merge_stream_states re-filtering back to tau centers."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from conftest import make_clustered_points
+from repro.core.compose import (
+    compact_coreset,
+    merge_stream_states,
+    snapshot_shards,
+    union_coresets,
+    unstack_shards,
+)
+from repro.core.matroid import MatroidSpec, PartitionMatroid
+from repro.core.streaming import (
+    ingest_batch,
+    ingest_batch_sharded,
+    init_sharded_states,
+    init_stream_state,
+    snapshot_coreset,
+)
+
+
+def _sharded_ingest(P, cats, caps_j, spec, k, tau, S, block_size=32):
+    n, d = P.shape
+    gamma = cats.shape[1]
+    sts = init_sharded_states(S, d, gamma, spec, k, tau)
+    mm = -(-n // S)
+    Pb = np.zeros((S, mm, d), np.float32)
+    Cb = np.full((S, mm, gamma), -1, np.int32)
+    Vb = np.zeros((S, mm), bool)
+    Sb = np.full((S, mm), -1, np.int32)
+    for s in range(S):
+        rows = np.arange(s, n, S)
+        r = len(rows)
+        Pb[s, :r] = P[rows]
+        Cb[s, :r] = cats[rows]
+        Vb[s, :r] = True
+        Sb[s, :r] = rows
+    return ingest_batch_sharded(
+        sts, jnp.asarray(Pb), jnp.asarray(Cb), jnp.asarray(Vb),
+        jnp.asarray(Sb), spec, caps_j, k, tau, block_size=block_size,
+    )
+
+
+def _instance(rng, n=400, h=4, k=4):
+    P = make_clustered_points(rng, n=n)
+    cats = rng.integers(0, h, (n, 1)).astype(np.int32)
+    caps = np.full(h, 2, np.int32)
+    spec = MatroidSpec("partition", num_categories=h, gamma=1)
+    return P, cats, caps, spec, k
+
+
+def test_sharded_ingest_equals_per_shard_loop(rng):
+    P, cats, caps, spec, k = _instance(rng)
+    n = P.shape[0]
+    tau, S = 10, 4
+    caps_j = jnp.asarray(caps)
+    sts = _sharded_ingest(P, cats, caps_j, spec, k, tau, S)
+    for s, shard_st in enumerate(unstack_shards(sts)):
+        rows = np.arange(s, n, S)
+        ref = init_stream_state(P.shape[1], 1, spec, k, tau)
+        ref = ingest_batch(
+            ref, jnp.asarray(P[rows]), jnp.asarray(cats[rows]),
+            jnp.ones((len(rows),), bool), spec, caps_j, k, tau,
+            src=jnp.asarray(rows, jnp.int32), block_size=1,
+        )
+        for f in ref._fields:
+            assert np.array_equal(
+                np.asarray(getattr(ref, f)), np.asarray(getattr(shard_st, f))
+            ), f"shard {s} field {f}"
+
+
+def test_snapshot_shards_is_union(rng):
+    P, cats, caps, spec, k = _instance(rng)
+    tau, S = 10, 3
+    caps_j = jnp.asarray(caps)
+    sts = _sharded_ingest(P, cats, caps_j, spec, k, tau, S)
+    union = snapshot_shards(sts)
+    manual = union_coresets(
+        [snapshot_coreset(st) for st in unstack_shards(sts)]
+    )
+    for f in union._fields:
+        assert np.array_equal(
+            np.asarray(getattr(union, f)), np.asarray(getattr(manual, f))
+        ), f
+    _, _, src = compact_coreset(union)
+    assert len(set(src.tolist())) == len(src)  # shards partition the stream
+
+
+def test_merge_refilters_to_tau_centers(rng):
+    P, cats, caps, spec, k = _instance(rng, n=600)
+    tau, S = 8, 4
+    caps_j = jnp.asarray(caps)
+    sts = _sharded_ingest(P, cats, caps_j, spec, k, tau, S)
+    merged = merge_stream_states(sts, spec, caps_j, k, tau)
+    assert int(np.asarray(merged.cvalid).sum()) <= tau
+    pts_m, cats_m, src_m = compact_coreset(snapshot_coreset(merged))
+    # merged delegates keep global stream identities and their payloads
+    assert set(src_m.tolist()) <= set(range(P.shape[0]))
+    assert np.allclose(pts_m, P[src_m], atol=1e-6)
+    assert np.array_equal(cats_m, cats[src_m])
+    # the merged coreset stays feasible for the matroid
+    m = PartitionMatroid(cats[:, 0], caps)
+    sel = m.greedy_independent([int(s) for s in src_m], k)
+    assert len(sel) == k
+
+
+def test_merge_accepts_list_of_states(rng):
+    P, cats, caps, spec, k = _instance(rng, n=300)
+    tau = 8
+    caps_j = jnp.asarray(caps)
+    halves = []
+    for rows in (np.arange(0, 150), np.arange(150, 300)):
+        st = init_stream_state(P.shape[1], 1, spec, k, tau)
+        halves.append(ingest_batch(
+            st, jnp.asarray(P[rows]), jnp.asarray(cats[rows]),
+            jnp.ones((len(rows),), bool), spec, caps_j, k, tau,
+            src=jnp.asarray(rows, jnp.int32),
+        ))
+    merged = merge_stream_states(halves, spec, caps_j, k, tau)
+    assert int(np.asarray(merged.cvalid).sum()) <= tau
+    _, _, src_m = compact_coreset(snapshot_coreset(merged))
+    assert len(src_m) > 0
+    # a single unstacked state is accepted too (wrapped, not iterated)
+    solo = merge_stream_states(halves[0], spec, caps_j, k, tau)
+    assert int(np.asarray(solo.cvalid).sum()) <= tau

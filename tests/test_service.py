@@ -44,14 +44,17 @@ def _transversal_instance(rng, n=300, h=5, gamma=2, k=3):
 # --------------------------------------------------------------------------
 
 
-def test_incremental_ingestion_matches_one_shot(rng):
+@pytest.mark.parametrize("block_size", [1, 7, 64, 256])
+def test_incremental_ingestion_matches_one_shot(rng, block_size):
+    """Batched == one-shot, and every blocked scan == the per-point scan
+    (the one-shot reference is pinned to block_size=1)."""
     P, cats, caps, spec, k = _partition_instance(rng)
     n, d = P.shape
     tau = 12
     caps_j = jnp.asarray(caps)
     cs1, st1 = stream_coreset(
         jnp.asarray(P), jnp.asarray(cats), jnp.ones((n,), bool),
-        spec, caps_j, k, tau,
+        spec, caps_j, k, tau, block_size=1,
     )
     st = init_stream_state(d, 1, spec, k, tau)
     off = 0
@@ -59,6 +62,7 @@ def test_incremental_ingestion_matches_one_shot(rng):
         st = ingest_batch(
             st, jnp.asarray(P[off:off + b]), jnp.asarray(cats[off:off + b]),
             jnp.ones((b,), bool), spec, caps_j, k, tau, base_index=off,
+            block_size=block_size,
         )
         off += b
     assert off == n
@@ -81,6 +85,80 @@ def test_service_snapshot_matches_offline_coreset(rng):
                      setting="streaming")
     _, _, src = svc.snapshot()
     assert np.array_equal(src, sol.coreset_indices)
+
+
+# --------------------------------------------------------------------------
+# sharded ingestion (§3 composability: per-shard coresets union on snapshot)
+# --------------------------------------------------------------------------
+
+
+def test_sharded_service_matches_per_shard_streams(rng):
+    """Each shard's state equals ingesting that shard's round-robin
+    sub-stream alone; the snapshot is their union in shard order."""
+    from repro.core.compose import unstack_shards
+
+    P, cats, caps, spec, k = _partition_instance(rng)
+    n = P.shape[0]
+    tau, S = 12, 3
+    svc = DiversityService(spec, k, tau=tau, caps=caps, num_shards=S,
+                           block_size=32)
+    for off in range(0, n, 150):
+        svc.ingest(P[off:off + 150], cats[off:off + 150])
+    caps_j = jnp.asarray(caps)
+    union_src = []
+    for s, shard_st in enumerate(unstack_shards(svc.state)):
+        rows = np.arange(s, n, S)
+        st = init_stream_state(P.shape[1], 1, spec, k, tau)
+        st = ingest_batch(
+            st, jnp.asarray(P[rows]), jnp.asarray(cats[rows]),
+            jnp.ones((len(rows),), bool), spec, caps_j, k, tau,
+            src=jnp.asarray(rows, jnp.int32),
+        )
+        for f in st._fields:
+            assert np.array_equal(
+                np.asarray(getattr(st, f)), np.asarray(getattr(shard_st, f))
+            ), f"shard {s} field {f} diverged"
+        cs = snapshot_coreset(st)
+        v = np.asarray(cs.valid)
+        union_src.append(np.asarray(cs.src_idx)[v])
+    _, _, src = svc.snapshot()
+    assert np.array_equal(src, np.concatenate(union_src))
+
+
+def test_sharded_service_quality_and_cache(rng):
+    """Union coreset answers are within the §3 composability guarantee of
+    the one-shot coreset's answer, and the pdist cache is invalidated only
+    when the union changes."""
+    P, cats, caps, spec, k = _partition_instance(rng, n=600)
+    tau = 12
+    svc1 = DiversityService(spec, k, tau=tau, caps=caps)
+    svc4 = DiversityService(spec, k, tau=tau, caps=caps, num_shards=4,
+                            block_size=32)
+    svc1.ingest(P, cats)
+    svc4.ingest(P, cats)
+    r1 = svc1.query(DiversityQuery(k=k))
+    r4 = svc4.query(DiversityQuery(k=k))
+    # the union is a superset-quality coreset: allow a generous slack but
+    # catch gross degradation (empirically the union is >= the single shard)
+    assert r4.diversity >= 0.8 * r1.diversity
+    assert r4.coreset_size >= r1.coreset_size
+    m = PartitionMatroid(cats[:, 0], caps)
+    assert m.is_independent(list(r4.indices))
+    # warm path: re-ingesting a delegate's duplicate that changes nothing
+    builds = svc4.cache.stats.builds
+    pts_c, cats_c, _ = svc4.snapshot()
+    rep = svc4.ingest(pts_c[:1], cats_c[:1])
+    svc4.query(DiversityQuery(k=k))
+    assert svc4.cache.stats.builds == builds + (1 if rep.coreset_changed else 0)
+
+
+def test_sharded_ingest_requires_multiple_shards(rng):
+    P, cats, caps, spec, k = _partition_instance(rng, n=50)
+    svc = DiversityService(spec, k, tau=8, caps=caps)
+    with pytest.raises(ValueError):
+        svc.ingest_sharded(P, cats)
+    with pytest.raises(ValueError):
+        DiversityService(spec, k, tau=8, caps=caps, num_shards=0)
 
 
 # --------------------------------------------------------------------------
