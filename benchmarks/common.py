@@ -53,6 +53,26 @@ def songs_like(n: int, seed: int = 0):
     return P.astype(np.float32), genre[:, None].astype(np.int32), caps, spec
 
 
+def songs_multilabel(n: int, seed: int = 0):
+    """Songs-like points with a *transversal* matroid: up to gamma=2 genre
+    labels per song over h=16 genres (the serve_bench workload for the
+    transversal-capable batched solver; Wikipedia's h=100 topic matroid has
+    the same structure at a size this container's CPU can sweep)."""
+    rng = np.random.default_rng(seed + 2)
+    h, gamma = 16, 2
+    sizes = rng.dirichlet(np.ones(h) * 0.5)
+    genre = rng.choice(h, n, p=sizes)
+    basis = rng.normal(size=(5, 100))
+    centers = rng.normal(size=(h, 5)) * 2
+    P = centers[genre] @ basis + 1.2 * rng.normal(size=(n, 100))
+    cats = np.full((n, gamma), -1, np.int32)
+    cats[:, 0] = genre
+    extra = rng.random(n) < 0.35
+    cats[extra, 1] = rng.integers(0, h, extra.sum())
+    spec = MatroidSpec("transversal", num_categories=h, gamma=gamma)
+    return P.astype(np.float32), cats, None, spec
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

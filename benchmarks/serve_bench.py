@@ -10,16 +10,23 @@ machines. ``benchmarks.run --check`` reruns the quick configuration and
 fails on >20% regressions of ``ingest_points_per_s`` / ``batched_qps``
 against the committed artifact.
 
-Workload: songs-like partition instance (Table 2 structure). "Cold" is the
-full offline driver (``solve_dmmc`` streaming: rebuild coreset + pdist +
+Workload: songs-like partition instance (Table 2 structure) plus a
+multi-label songs variant under a transversal matroid. "Cold" is the full
+offline driver (``solve_dmmc`` streaming: rebuild coreset + pdist +
 solve); "warm" answers on the service's cached coreset distance matrix. The
 acceptance bars for this subsystem: warm >= 5x faster than cold, and the
 blocked scan >= 20x the PR-1 per-point ingest throughput (3215 pps on the
 quick configuration).
+
+Per solver-registry cell the bench records batched QPS
+(``batched_qps_by_engine``) and the engine mix of representative auto
+batches (``engine_mix``); ``--check`` additionally fails when a dispatch
+regression routes transversal or star/tree batches back to 100% host.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import platform as _platform
@@ -28,7 +35,7 @@ import time
 
 import numpy as np
 
-from .common import Timer, csv_line, songs_like
+from .common import Timer, csv_line, songs_like, songs_multilabel
 
 BLOCK_SIZE = 128
 NUM_SHARDS = 8
@@ -113,6 +120,63 @@ def _bench(quick: bool) -> dict:
     assert svc.cache.stats.builds == 1, "batched path rebuilt the matrix"
     qps = len(out) / float(np.min(b_lat))
 
+    # ---- per-engine batched QPS + eligibility mix (solver registry) ----
+    def _batch_qps(svc_, qs_, engine_="auto", reps_=3):
+        svc_.query_batch(qs_, engine=engine_)  # compile/warm this shape
+        lats = []
+        for _ in range(reps_):
+            with Timer() as t_:
+                got = svc_.query_batch(qs_, engine=engine_)
+            lats.append(t_.s)
+        return len(got) / float(np.min(lats)), got
+
+    def _mix(results) -> dict:
+        counts: dict[str, int] = {}
+        for r_ in results:
+            counts[r_.engine] = counts.get(r_.engine, 0) + 1
+        return {e: c / len(results) for e, c in sorted(counts.items())}
+
+    # sum under partition: the historical fast cell
+    qs_sum = [DiversityQuery(k=2 + i % 7) for i in range(32)]
+    qps_part_jit, _ = _batch_qps(svc, qs_sum, "jit_sum", reps)
+    qps_part_host, _ = _batch_qps(svc, qs_sum, "host")
+    # star/tree under partition: exact host vs opt-in vmapped greedy
+    qs_st = [
+        DiversityQuery(k=3, variant="tree" if i % 2 else "star")
+        for i in range(8)
+    ]
+    qs_st_hint = [
+        dataclasses.replace(q, engine_hint="jit_greedy") for q in qs_st
+    ]
+    qps_st_greedy, out_st = _batch_qps(svc, qs_st_hint, "auto", reps)
+    qps_st_host, _ = _batch_qps(svc, qs_st, "host")
+    # sum under transversal: the new jit cell (was 100% host before the
+    # solver-engine refactor)
+    n_tv = max(1000, n // 4)
+    Ptv, cats_tv, _, spec_tv = songs_multilabel(n_tv)
+    svc_tv = DiversityService(spec_tv, k, tau=tau, block_size=BLOCK_SIZE)
+    svc_tv.ingest(Ptv, cats_tv)
+    qs_tv = [DiversityQuery(k=2 + i % 4) for i in range(32)]
+    qps_tv_jit, out_tv = _batch_qps(svc_tv, qs_tv, "auto", reps)
+    qps_tv_host, _ = _batch_qps(svc_tv, qs_tv, "host")
+    res_tv = svc_tv.query(DiversityQuery(k=k))
+
+    batched_qps_by_engine = dict(
+        partition_sum_jit_sum=float(qps_part_jit),
+        partition_sum_host=float(qps_part_host),
+        partition_startree_jit_greedy=float(qps_st_greedy),
+        partition_startree_host=float(qps_st_host),
+        transversal_sum_auto=float(qps_tv_jit),
+        transversal_sum_host=float(qps_tv_host),
+    )
+    # a heterogeneous auto batch: the registry partitions it per query
+    out_mixed = svc.query_batch(qs_sum[:24] + qs_st)
+    engine_mix = dict(
+        partition_auto=_mix(out_mixed),
+        transversal_auto=_mix(out_tv),
+        startree_hint=_mix(out_st),
+    )
+
     speedup = t_cold.s / warm_s
     dev = jax.devices()[0]
     return dict(
@@ -125,6 +189,10 @@ def _bench(quick: bool) -> dict:
         warm_speedup_vs_cold=float(speedup),
         batched_qps=float(qps),
         batch_size=len(out),
+        batched_qps_by_engine=batched_qps_by_engine,
+        engine_mix=engine_mix,
+        transversal_n=int(n_tv),
+        transversal_coreset_size=int(res_tv.coreset_size),
         offline_diversity=float(sol.diversity),
         warm_diversity=float(res.diversity),
         sharded_diversity=float(sharded_res.diversity),
@@ -194,6 +262,22 @@ def check(tolerance: float = 0.2, quick: bool = True) -> int:
               f"now {new[metric]:.0f}, floor {floor:.0f} -> {verdict}")
         if not ok and same_env:
             rc = 1
+    # eligibility-mix gate (machine-independent): the jit engines must keep
+    # covering their (variant x matroid) cells — a dispatch regression that
+    # silently routes transversal or star/tree batches back to 100% host
+    # fails even when absolute throughput is not comparable
+    mix = new.get("engine_mix", {})
+    for workload, engine_name in (
+        ("partition_auto", "jit_sum"),
+        ("transversal_auto", "jit_sum"),
+        ("startree_hint", "jit_greedy"),
+    ):
+        frac = mix.get(workload, {}).get(engine_name, 0.0)
+        ok = frac > 0.0
+        print(f"check: engine_mix[{workload}][{engine_name}] = {frac:.2f} "
+              f"-> {'OK' if ok else 'ROUTING REGRESSION'}")
+        if not ok:
+            rc = 1
     return rc
 
 
@@ -215,6 +299,12 @@ def main(quick: bool = False, emit_json: bool = False):
                    f"speedup={r['warm_speedup_vs_cold']:.1f}x")
     yield csv_line("serve_batched", 1e6 / r["batched_qps"],
                    f"qps={r['batched_qps']:.0f} batch={r['batch_size']}")
+    for cell, cqps in r["batched_qps_by_engine"].items():
+        yield csv_line(f"serve_batched_{cell}", 1e6 / cqps,
+                       f"qps={cqps:.0f}")
+    for workload, mix in r["engine_mix"].items():
+        pretty = " ".join(f"{e}={frac:.2f}" for e, frac in mix.items())
+        yield csv_line(f"serve_mix_{workload}", 0.0, pretty)
     if r["warm_speedup_vs_cold"] < 5.0:
         yield csv_line("serve_SPEEDUP_BELOW_5X", 0.0,
                        f"{r['warm_speedup_vs_cold']:.2f}x")

@@ -25,10 +25,10 @@ def main():
     for setting in ("sequential", "streaming", "mapreduce"):
         kw = dict(setting=setting, tau=64)
         if setting == "mapreduce":
-            kw["mesh"] = jax.make_mesh(
-                (len(jax.devices()),), ("data",),
-                axis_types=(jax.sharding.AxisType.Auto,),
-            )
+            # launch.mesh.make_mesh papers over the AxisType API drift
+            from repro.launch.mesh import make_mesh
+
+            kw["mesh"] = make_mesh((len(jax.devices()),), ("data",))
         sol = solve_dmmc(points, k, spec, cats=cats, caps=caps, **kw)
         m = PartitionMatroid(cats[:, 0], caps)
         assert m.is_independent(list(sol.indices))

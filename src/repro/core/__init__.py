@@ -7,6 +7,9 @@ Public API:
     stream_coreset, stream_coreset_host     -- streaming construction (Alg. 2)
     mapreduce_coreset                       -- shard_map MR construction (4.2)
     local_search_sum, exhaustive_best       -- final-stage solvers (4.4)
+    SolverEngine, register_engine, ...      -- pluggable solver-engine registry
+                                               (core.solvers; jit batch engines
+                                               + host reference engines)
     solve_dmmc                              -- end-to-end driver
     diversity, jnp_diversity, VARIANTS      -- Table-1 objectives
 """
@@ -33,6 +36,17 @@ from .compose import (
 )
 from .distributed_gmm import distributed_coreset
 from .final_solve import coreset_distance_matrix, final_solve
+from .solvers import (
+    SolveContext,
+    SolveSpec,
+    SolverEngine,
+    coverage_matrix,
+    get_engine,
+    register_engine,
+    registered_engines,
+    select_engine,
+    selection_value,
+)
 from .solve import DMMCSolution, solve_dmmc
 from .streaming import (
     StreamState,
@@ -60,4 +74,7 @@ __all__ = [
     "merge_stream_states", "snapshot_shards", "union_coresets",
     "unstack_shards",
     "coreset_distance_matrix", "final_solve",
+    "SolveContext", "SolveSpec", "SolverEngine", "coverage_matrix",
+    "get_engine", "register_engine", "registered_engines", "select_engine",
+    "selection_value",
 ]

@@ -20,11 +20,11 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+
 from ..kernels import ops as kernel_ops
 from .diversity import Variant
-from .exhaustive import exhaustive_best
-from .local_search import local_search_sum
 from .matroid import Matroid
+from .solvers import SolveContext, SolveSpec, resolve_engine, select_engine
 
 
 def coreset_distance_matrix(
@@ -70,17 +70,40 @@ def final_solve(
     *,
     idxs: Optional[Sequence[int]] = None,
     gamma: float = 0.0,
+    engine: str = "host",
+    cats: Optional[np.ndarray] = None,
+    caps: Optional[np.ndarray] = None,
 ) -> tuple[list[int], float]:
     """Best independent k-subset of ``idxs`` under ``variant``, reading only D.
 
-    sum    -> AMT local search (the paper's coreset solver, footnote 5);
-    others -> exhaustive search with matroid pruning (exact on the coreset).
-    Returns (selected local indices, diversity value).
+    Dispatches through the ``core.solvers`` registry. The default
+    ``engine="host"`` is the paper's dispatch (sum -> AMT local search,
+    footnote 5; others -> exhaustive search, exact on the coreset) and
+    stays the offline driver's default: a one-shot solve would pay a jit
+    compile per novel coreset size for no amortization. ``engine="auto"``
+    picks the fastest registered engine with the host-parity guarantee
+    (pass ``cats``/``caps`` so the jit engines are eligible); any
+    registered engine name forces that engine. Returns (selected local
+    indices, canonical float64 diversity value).
     """
-    if idxs is None:
-        idxs = list(range(D.shape[0]))
-    if variant == "sum":
-        X, val, _ = local_search_sum(D, matroid, k, idxs, gamma=gamma)
+    ctx = SolveContext(
+        D=np.asarray(D),
+        spec=matroid.spec,
+        cats=None if cats is None else np.asarray(cats, np.int32),
+        caps=None if caps is None else np.asarray(caps, np.int32),
+        matroid_fn=lambda _spec: matroid,
+    )
+    # idxs passes through as an explicit candidate order: host solvers'
+    # tie-breaks are visit-order dependent, so the sequence (duplicates
+    # included) reaches them unchanged; jit engines refuse non-ascending
+    # orders via eligible()
+    spec = SolveSpec(
+        k=k, variant=variant, gamma=gamma,
+        idxs=None if idxs is None else tuple(int(i) for i in idxs),
+    )
+    if engine == "auto":
+        eng = select_engine(ctx, spec)
     else:
-        X, val, _complete = exhaustive_best(D, matroid, k, idxs, variant)
-    return [int(i) for i in X], float(val)
+        eng = resolve_engine(engine, ctx, spec)
+    sol = eng.solve_one(ctx, spec)
+    return [int(i) for i in sol.local_indices], float(sol.value)

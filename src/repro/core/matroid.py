@@ -100,7 +100,15 @@ class PartitionMatroid(Matroid):
     def __init__(self, cats: np.ndarray, caps: np.ndarray):
         cats = np.asarray(cats, np.int32)
         if cats.ndim == 2:
-            assert cats.shape[1] == 1
+            # extra columns may only carry -1 padding: a partition matroid
+            # assigns each element exactly one class — multi-label ground
+            # sets are transversal-matroid territory, and truncating the
+            # extra labels would silently change the constraint
+            if cats.shape[1] > 1 and np.any(cats[:, 1:] >= 0):
+                raise ValueError(
+                    "partition matroid got multi-label categories "
+                    "(a point carries >1 label); use a transversal spec"
+                )
             cats = cats[:, 0]
         self.cats = cats
         self.caps = np.asarray(caps, np.int64)

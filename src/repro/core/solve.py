@@ -49,6 +49,7 @@ def _final_solve(
     variant: Variant,
     oracle=None,
     gamma: float = 0.0,
+    engine: str = "host",
 ) -> tuple[list[int], float]:
     matroid = make_host_matroid(
         spec,
@@ -65,7 +66,12 @@ def _final_solve(
     )
     Dsub = coreset_distance_matrix(pts)
     view = SubsetMatroidView(matroid, sub)
-    X, val = final_solve(Dsub, view, k, variant, gamma=gamma)
+    # cats/caps restricted to the coreset rows make the jit engines
+    # eligible when the caller asks for engine="auto"/"jit_*"
+    X, val = final_solve(
+        Dsub, view, k, variant, gamma=gamma, engine=engine,
+        cats=None if cats is None else np.asarray(cats)[sub], caps=caps,
+    )
     return [int(sub[i]) for i in X], val
 
 
@@ -86,8 +92,15 @@ def solve_dmmc(
     round2_tau: Optional[int] = None,
     oracle=None,
     gamma: float = 0.0,
+    engine: str = "host",
 ) -> DMMCSolution:
-    """Solve a DMMC instance end to end. Exactly one of eps/tau."""
+    """Solve a DMMC instance end to end. Exactly one of eps/tau.
+
+    ``engine`` names a ``core.solvers`` registry engine for the final
+    stage ("host" = the paper's dispatch, the offline default — a one-shot
+    solve cannot amortize a jit compile; "auto" = fastest host-parity
+    engine; or any registered engine name).
+    """
     assert (eps is None) != (tau is None)
     n, d = points.shape
     t0 = time.perf_counter()
@@ -146,7 +159,7 @@ def solve_dmmc(
     t1 = time.perf_counter()
     sol_idx, val = _final_solve(
         np.asarray(pts_norm), cats_arr, spec, caps, k,
-        np.asarray(idx), variant, oracle, gamma,
+        np.asarray(idx), variant, oracle, gamma, engine,
     )
     t2 = time.perf_counter()
 

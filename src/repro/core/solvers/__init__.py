@@ -1,0 +1,62 @@
+"""Pluggable final-stage solver engines (§4.4 behind one seam).
+
+Importing this package registers the built-in engines:
+
+    jit_sum           vmapped batched sum solver — uniform/partition/
+                      transversal matroids; host-parity
+    jit_greedy        vmapped batched star/tree greedy — approximate,
+                      explicit opt-in only (engine=/engine_hint=)
+    host_local_search AMT local search, sum under any matroid (reference)
+    host_exhaustive   exact DFS, non-sum variants under any matroid
+                      (reference)
+
+``select_engine`` implements ``engine="auto"`` (fastest eligible engine
+with the host-parity guarantee); ``register_engine`` accepts custom
+engines (see README "Solver engines").
+"""
+from .base import (
+    MATROID_KINDS,
+    EngineSolution,
+    SolveContext,
+    SolveSpec,
+    SolverEngine,
+    coverage_matrix,
+    get_engine,
+    partition_by_engine,
+    register_engine,
+    registered_engines,
+    resolve_engine,
+    select_engine,
+    selection_value,
+)
+from .exhaustive import exhaustive_best
+from .host import HostExhaustiveEngine, HostLocalSearchEngine
+from .jit_greedy import (
+    JitGreedyBatchEngine,
+    solve_greedy_batch,
+    solve_greedy_batch_transversal,
+)
+from .jit_sum import (
+    JitSumBatchEngine,
+    bucket_pow2,
+    solve_sum_batch,
+    solve_sum_batch_transversal,
+)
+from .local_search import greedy_init, local_search_sum
+
+HOST_LOCAL_SEARCH = register_engine(HostLocalSearchEngine())
+HOST_EXHAUSTIVE = register_engine(HostExhaustiveEngine())
+JIT_SUM = register_engine(JitSumBatchEngine())
+JIT_GREEDY = register_engine(JitGreedyBatchEngine())
+
+__all__ = [
+    "MATROID_KINDS", "EngineSolution", "SolveContext", "SolveSpec",
+    "SolverEngine", "coverage_matrix", "get_engine", "partition_by_engine",
+    "register_engine", "registered_engines", "resolve_engine",
+    "select_engine", "selection_value",
+    "HostExhaustiveEngine", "HostLocalSearchEngine",
+    "JitGreedyBatchEngine", "JitSumBatchEngine",
+    "bucket_pow2", "solve_sum_batch", "solve_sum_batch_transversal",
+    "solve_greedy_batch", "solve_greedy_batch_transversal",
+    "exhaustive_best", "greedy_init", "local_search_sum",
+]

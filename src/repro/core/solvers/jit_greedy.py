@@ -1,0 +1,215 @@
+"""Vectorized greedy batch engine for the star/tree variants.
+
+For star/tree/cycle/bipartition the exact reference is exhaustive search
+(``host_exhaustive``) — no polynomial exact algorithm is known, which is
+why the paper runs it on the coreset only. That is still the serving
+bottleneck for large query bursts, so this engine offers a *fast
+approximate* alternative: a vmapped objective-greedy — at each step add
+the feasible candidate maximizing the resulting set's objective, evaluated
+with the jit objectives of ``core.diversity`` (``star_div``/``tree_div``)
+on a masked submatrix.
+
+Because greedy is a heuristic, this engine declares ``exact_parity =
+False``: ``engine="auto"`` never picks it. Queries opt in explicitly with
+``engine="jit_greedy"`` or ``DiversityQuery(engine_hint="jit_greedy")``,
+keeping the host exact answer one flag away (the parity/fallback engine).
+
+Feasibility reuses the same machinery as the sum engine: counts<caps for
+uniform/partition, exact masked augmenting paths for transversal.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..diversity import Variant, star_div, tree_div
+from .base import (
+    EngineSolution,
+    SolveContext,
+    SolveSpec,
+    SolverEngine,
+    selection_value,
+)
+from .jit_sum import (
+    bucket_pow2,
+    jit_cell_eligible,
+    pad_query_arrays,
+    partition_arrays,
+)
+from .matching import augment, cats_onehot, feasible_all
+
+_INF = jnp.float32(jnp.inf)
+
+
+def _masked_star(Dsub: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """star_div over the valid slots only: invalid rows are pushed to +inf
+    (never the min), invalid columns contribute 0 to valid rows' sums."""
+    vv = valid[:, None] & valid[None, :]
+    D1 = jnp.where(vv, Dsub, 0.0) + jnp.where(valid, 0.0, _INF)[:, None]
+    return star_div(D1)
+
+
+def _masked_tree(Dsub: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """tree_div over the valid slots only: invalid slots attach to slot 0
+    by a zero-weight edge (adding 0 to the MST) and are unreachable
+    otherwise, so Prim's fixed-length scan still spans every slot."""
+    vv = valid[:, None] & valid[None, :]
+    D1 = jnp.where(vv, Dsub, _INF)
+    col0 = jnp.where(valid, Dsub[:, 0], 0.0)
+    D1 = D1.at[:, 0].set(col0).at[0, :].set(col0)
+    return tree_div(D1)
+
+
+_MASKED = {"star": _masked_star, "tree": _masked_tree}
+
+
+def _candidate_values(D, sel, nsel, variant, kmax):
+    """Objective of (current selection + candidate v) for every v: the
+    candidate sits in slot ``nsel`` of the padded submatrix."""
+    idx = jnp.maximum(sel, 0)
+    slots = jnp.arange(kmax, dtype=jnp.int32)
+    masked = _MASKED[variant]
+
+    def eval_v(v):
+        idx2 = idx.at[nsel].set(v)
+        Ds = D[idx2][:, idx2]
+        return masked(Ds, slots <= nsel)
+
+    return jax.vmap(eval_v)(jnp.arange(D.shape[0]))
+
+
+def _greedy_one(D, can_fn, add_fn, feas0, allow, k, variant, kmax):
+    """Shared greedy loop; ``can_fn``/``add_fn`` inject the matroid
+    feasibility (counts-based or matching-based)."""
+    rowsum_all = jnp.sum(D, axis=1)  # step-0 tie-break: most eccentric
+
+    def body(i, carry):
+        sel, selmask, feas, nsel = carry
+        can = allow & ~selmask & can_fn(feas)
+        vals = _candidate_values(D, sel, nsel, variant, kmax)
+        gains = jnp.where(nsel == 0, rowsum_all, vals)
+        v = jnp.argmax(jnp.where(can, gains, -_INF))
+        take = (i < k) & jnp.any(can)
+
+        def add(c):
+            sel, selmask, feas, nsel = c
+            return (
+                sel.at[nsel].set(v),
+                selmask.at[v].set(True),
+                add_fn(feas, v),
+                nsel + 1,
+            )
+
+        return jax.lax.cond(take, add, lambda c: c, carry)
+
+    init = (
+        jnp.full((kmax,), -1, jnp.int32),
+        jnp.zeros((D.shape[0],), bool),
+        feas0,
+        jnp.int32(0),
+    )
+    sel, _selmask, _feas, nsel = jax.lax.fori_loop(0, kmax, body, init)
+    return sel, nsel
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "kmax"))
+def solve_greedy_batch(
+    D: jnp.ndarray,  # (m, m)
+    cats: jnp.ndarray,  # (m,) int32 single-label (zeros: uniform)
+    caps: jnp.ndarray,  # (B, h)
+    allow: jnp.ndarray,  # (B, m)
+    ks: jnp.ndarray,  # (B,)
+    *,
+    variant: str,
+    kmax: int,
+):
+    """Batched star/tree greedy under uniform/partition matroids.
+    Returns (sel (B, kmax) -1-padded, nsel (B,))."""
+    h = caps.shape[1]
+
+    def one(caps_q, allow_q, k):
+        can_fn = lambda counts: counts[cats] < caps_q[cats]
+        add_fn = lambda counts, v: counts.at[cats[v]].add(1)
+        feas0 = jnp.zeros((h,), jnp.int32)
+        return _greedy_one(D, can_fn, add_fn, feas0, allow_q, k, variant, kmax)
+
+    return jax.vmap(one, in_axes=(0, 0, 0))(caps, allow, ks)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "kmax"))
+def solve_greedy_batch_transversal(
+    D: jnp.ndarray,  # (m, m)
+    oh: jnp.ndarray,  # (m, h) bool
+    allow: jnp.ndarray,  # (B, m)
+    ks: jnp.ndarray,  # (B,)
+    *,
+    variant: str,
+    kmax: int,
+):
+    """Batched star/tree greedy under ONE transversal matroid."""
+    h = oh.shape[1]
+
+    def one(allow_q, k):
+        can_fn = lambda ms_pt: feasible_all(oh, ms_pt, kmax)
+        add_fn = lambda ms_pt, v: augment(oh, ms_pt, v, kmax)
+        feas0 = jnp.full((h,), -1, jnp.int32)
+        return _greedy_one(D, can_fn, add_fn, feas0, allow_q, k, variant, kmax)
+
+    return jax.vmap(one, in_axes=(0, 0))(allow, ks)
+
+
+class JitGreedyBatchEngine(SolverEngine):
+    """Registry face of the batched greedy star/tree solvers."""
+
+    name = "jit_greedy"
+    priority = 20
+    exact_parity = False  # greedy heuristic; host exhaustive is exact
+
+    def supports(self, variant: Variant, matroid_kind: str) -> bool:
+        return variant in ("star", "tree") and matroid_kind in (
+            "uniform", "partition", "transversal"
+        )
+
+    def eligible(self, ctx: SolveContext, spec: SolveSpec) -> bool:
+        return jit_cell_eligible(self, ctx, spec)
+
+    def solve_batch(
+        self, ctx: SolveContext, specs: Sequence[SolveSpec]
+    ) -> list[EngineSolution]:
+        # one jit dispatch per variant present in the group
+        by_variant: dict[str, list[int]] = {}
+        for i, s in enumerate(specs):
+            by_variant.setdefault(s.variant, []).append(i)
+        out: list[EngineSolution] = [None] * len(specs)  # type: ignore
+        for variant, idxs in by_variant.items():
+            group = [specs[i] for i in idxs]
+            Bb = bucket_pow2(len(group))
+            kmax = bucket_pow2(max(s.k for s in group))
+            allow_b, ks, _gammas = pad_query_arrays(ctx, group, Bb)
+            if ctx.spec.kind == "transversal":
+                oh = cats_onehot(ctx.cats, ctx.spec.num_categories)
+                sel, nsel = solve_greedy_batch_transversal(
+                    jnp.asarray(ctx.D), jnp.asarray(oh),
+                    jnp.asarray(allow_b), jnp.asarray(ks),
+                    variant=variant, kmax=kmax,
+                )
+            else:
+                cats1, caps_b = partition_arrays(ctx, group, Bb)
+                sel, nsel = solve_greedy_batch(
+                    jnp.asarray(ctx.D), jnp.asarray(cats1),
+                    jnp.asarray(caps_b), jnp.asarray(allow_b),
+                    jnp.asarray(ks), variant=variant, kmax=kmax,
+                )
+            sel, nsel = np.asarray(sel), np.asarray(nsel)
+            for j, i in enumerate(idxs):
+                loc = sel[j, : nsel[j]].astype(np.int64)
+                out[i] = EngineSolution(
+                    local_indices=loc,
+                    value=selection_value(ctx.D, loc, variant),
+                    engine=self.name,
+                )
+        return out

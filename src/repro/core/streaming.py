@@ -137,33 +137,15 @@ def _handle(spec: MatroidSpec, k: int, caps, st: StreamState, z, x, xc, xsrc):
 
 def _shrink(spec: MatroidSpec, k: int, st: StreamState, z):
     """Greedy-matching shrink: if a greedy matching of D_z covers k slots,
-    keep exactly those slots (a witnessed independent set of size k)."""
-    h = spec.num_categories
+    keep exactly those slots (a witnessed independent set of size k). The
+    matching loop itself lives in ``solvers.matching`` (shared with the
+    batched transversal solver's machinery) and is bit-identical to the
+    historical inline version."""
+    from .solvers.matching import greedy_matching_slots
+
     slots_v = st.dv[z]
-    cats = st.dc[z]  # (SLOT, gamma)
-    slot_n, gamma = cats.shape
-
-    def body(s, carry):
-        used, matched = carry
-
-        def try_slot(carry):
-            used, matched = carry
-            free = (cats[s] >= 0) & ~used[jnp.maximum(cats[s], 0)]
-            j = jnp.argmax(free)  # first free category slot
-            ok = jnp.any(free)
-            cat = jnp.maximum(cats[s, j], 0)
-            used = jax.lax.cond(
-                ok, lambda u: u.at[cat].set(True), lambda u: u, used
-            )
-            matched = matched.at[s].set(ok)
-            return used, matched
-
-        return jax.lax.cond(slots_v[s], try_slot, lambda c: c, carry)
-
-    used0 = jnp.zeros((h,), bool)
-    matched0 = jnp.zeros((slot_n,), bool)
-    used, matched = jax.lax.fori_loop(
-        0, slot_n, body, (used0, matched0)
+    _used, matched = greedy_matching_slots(
+        st.dc[z], slots_v, spec.num_categories
     )
     size = jnp.sum(matched.astype(jnp.int32))
 

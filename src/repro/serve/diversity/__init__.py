@@ -5,8 +5,14 @@ coreset distance matrix — never touching the full dataset.
 
     svc = DiversityService(spec, k=10, tau=64, caps=caps, metric="cosine")
     svc.ingest(batch, cats=batch_cats)          # any number of times
-    res = svc.query(DiversityQuery(k=10))       # exact solve_dmmc parity
-    out = svc.query_batch([q1, q2, ...])        # vmapped fast path for sum
+    res = svc.query(DiversityQuery(k=10))       # engine="auto": host parity
+    out = svc.query_batch([q1, q2, ...])        # partitioned across engines
+
+Queries dispatch through the ``core.solvers`` engine registry —
+``engine="auto"`` (the default everywhere) batches sum queries under
+uniform/partition/transversal matroids onto the vmapped jit solver and
+keeps everything else on the host reference solvers, so every answer
+matches ``solve_dmmc`` on the same coreset. See README "Solver engines".
 """
 from .cache import CacheKey, CacheStats, CoresetEntry, DistanceCache
 from .query import DiversityQuery, QueryResult

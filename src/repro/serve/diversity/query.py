@@ -1,28 +1,22 @@
-"""Query/result types + the vectorized batched final-stage solver.
+"""Query/result types for the diversity service.
 
-``solve_sum_batch`` answers a batch of heterogeneous sum-diversity queries
-(per-query k, category caps, candidate filters) against ONE cached coreset
-distance matrix: a vmapped greedy seeding + masked first-improvement local
-search, mirroring ``core.local_search.local_search_sum`` step for step
-(same greedy gains, same (v, u) scan order, same incremental swap value, X
-kept in insertion order) so the fast path lands on the same local optimum as
-the host solver on the same matrix.
-
-Everything is masked to static shapes: queries are padded to the batch's
-``kmax``; infeasible queries simply stop early (nsel < k) like the host
-solver does.
+The batched solvers that used to live here moved to
+``core.solvers.jit_sum`` (and grew transversal support) when the
+final-stage solving stack became the registry-dispatched
+``core.solvers`` package; ``solve_sum_batch`` is re-exported for
+back-compat. A query can nudge engine selection with ``engine_hint``
+(e.g. ``"jit_greedy"`` to trade the exact star/tree answer for the fast
+vmapped greedy); hints that don't apply fall back to the auto policy.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ...core.diversity import Variant
+from ...core.solvers.jit_sum import solve_sum_batch  # noqa: F401  (back-compat)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +26,10 @@ class DiversityQuery:
     caps         per-query partition caps override (defaults to the service's)
     allowed_cats restrict candidates to points carrying one of these categories
     gamma        local-search improvement threshold (sum variant only)
+    engine_hint  prefer this registry engine for this query (soft: ignored
+                 when ineligible; engines without the host-parity guarantee,
+                 like "jit_greedy", are only ever used via a hint or an
+                 explicit engine= argument)
     """
 
     k: int
@@ -39,6 +37,7 @@ class DiversityQuery:
     caps: Optional[tuple[int, ...]] = None
     allowed_cats: Optional[frozenset[int]] = None
     gamma: float = 0.0
+    engine_hint: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -47,7 +46,7 @@ class QueryResult:
     local_indices: np.ndarray  # rows of the cached coreset matrix
     diversity: float
     variant: str
-    engine: str  # "host" | "vmap"
+    engine: str  # registry engine name ("jit_sum", "host_exhaustive", ...)
     coreset_size: int
     from_cache: bool
 
@@ -61,119 +60,3 @@ def candidate_mask(
         return np.ones((m,), bool)
     hit = np.isin(cats, np.fromiter(allowed, np.int32, len(allowed)))
     return np.any(hit & (cats >= 0), axis=1)
-
-
-# --------------------------------------------------------------------------
-# vmapped sum-variant solver (uniform/partition matroids, gamma == 1)
-# --------------------------------------------------------------------------
-
-
-def _greedy_seed(D, cats, caps, allow, k, kmax):
-    """Mirror of local_search.greedy_init: max marginal-gain candidate per
-    step (first index wins ties), partition feasibility via counts<caps."""
-    m = D.shape[0]
-    h = caps.shape[0]
-    rowsum_all = jnp.sum(D, axis=1)  # gain of the very first pick
-
-    def body(i, carry):
-        sel, selmask, counts, nsel = carry
-        can = allow & ~selmask & (counts[cats] < caps[cats])
-        gains = jnp.where(
-            nsel == 0, rowsum_all, D @ selmask.astype(jnp.float32)
-        )
-        v = jnp.argmax(jnp.where(can, gains, -jnp.inf))
-        take = (i < k) & jnp.any(can)
-
-        def add(c):
-            sel, selmask, counts, nsel = c
-            return (
-                sel.at[nsel].set(v),
-                selmask.at[v].set(True),
-                counts.at[cats[v]].add(1),
-                nsel + 1,
-            )
-
-        return jax.lax.cond(take, add, lambda c: c, carry)
-
-    init = (
-        jnp.full((kmax,), -1, jnp.int32),
-        jnp.zeros((m,), bool),
-        jnp.zeros((h,), jnp.int32),
-        jnp.int32(0),
-    )
-    return jax.lax.fori_loop(0, kmax, body, init)
-
-
-def _solve_sum_one(D, cats, caps, allow, k, gamma, *, kmax, max_sweeps):
-    """Single-query greedy + first-improvement local search over cached D."""
-    m = D.shape[0]
-    sel, selmask, counts, nsel = _greedy_seed(D, cats, caps, allow, k, kmax)
-    selm_f = selmask.astype(jnp.float32)
-    div0 = 0.5 * jnp.dot(selm_f, D @ selm_f)
-    slots = jnp.arange(kmax, dtype=jnp.int32)
-
-    def v_body(v, st):
-        sel, selmask, counts, rowX, div, improved = st
-        u = jnp.maximum(sel, 0)  # (kmax,) slot -> local id (garbage past k)
-        # div(X - u + v) = div - row[u] + dv - d(u, v)   (host's identity)
-        new_div = div - rowX[u] + rowX[v] - D[u, v]
-        cat_v = cats[v]
-        ok_cap = counts[cat_v] - (cats[u] == cat_v) + 1 <= caps[cat_v]
-        improving = (
-            (slots < nsel)
-            & (new_div > div * (1.0 + gamma))
-            & (new_div > div)
-            & ok_cap
-        )
-        any_imp = allow[v] & ~selmask[v] & jnp.any(improving)
-        ui = jnp.argmax(improving)  # first improving u in X order
-
-        def do_swap(st):
-            sel, selmask, counts, rowX, div, improved = st
-            uold = sel[ui]
-            # host order: X = [w for w in X if w != u] + [v]
-            src = jnp.where(slots >= ui, jnp.minimum(slots + 1, kmax - 1), slots)
-            sel2 = sel[src].at[nsel - 1].set(v)
-            selmask2 = selmask.at[uold].set(False).at[v].set(True)
-            counts2 = counts.at[cats[uold]].add(-1).at[cat_v].add(1)
-            rowX2 = D @ selmask2.astype(jnp.float32)
-            return sel2, selmask2, counts2, rowX2, new_div[ui], True
-
-        return jax.lax.cond(any_imp, do_swap, lambda s: s, st)
-
-    def sweep_cond(carry):
-        st, sweeps = carry
-        return st[-1] & (sweeps < max_sweeps)
-
-    def sweep_body(carry):
-        st, sweeps = carry
-        st = (*st[:-1], False)
-        st = jax.lax.fori_loop(0, m, v_body, st)
-        return st, sweeps + 1
-
-    rowX0 = D @ selm_f
-    ls0 = ((sel, selmask, counts, rowX0, div0, nsel == k), jnp.int32(0))
-    (sel, selmask, counts, _rowX, div, _imp), _ = jax.lax.while_loop(
-        sweep_cond, sweep_body, ls0
-    )
-    return sel, nsel, div
-
-
-@functools.partial(jax.jit, static_argnames=("kmax", "max_sweeps"))
-def solve_sum_batch(
-    D: jnp.ndarray,  # (m, m) cached coreset distances
-    cats: jnp.ndarray,  # (m,) int32 single-label categories (zeros: uniform)
-    caps: jnp.ndarray,  # (B, h) per-query caps
-    allow: jnp.ndarray,  # (B, m) per-query candidate masks
-    ks: jnp.ndarray,  # (B,)
-    gammas: jnp.ndarray,  # (B,)
-    *,
-    kmax: int,
-    max_sweeps: int = 64,
-):
-    """Batch of sum-DMMC queries on one matrix. Returns (sel (B, kmax) local
-    ids -1-padded, nsel (B,), div (B,))."""
-    f = functools.partial(_solve_sum_one, kmax=kmax, max_sweeps=max_sweeps)
-    return jax.vmap(f, in_axes=(None, None, 0, 0, 0, 0))(
-        D, cats, caps, allow, ks, gammas
-    )

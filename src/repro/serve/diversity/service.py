@@ -13,10 +13,16 @@ resumable streaming-scan state (``core.streaming.StreamState``) and the small
              ``DistanceCache`` keyed by (MatroidSpec, tau, metric) and a
              content fingerprint — ingestion that does not change the
              coreset keeps the matrix warm;
-  query      answered on the cached matrix only: the host final-stage solver
-             (bit-identical to ``solve_dmmc``) for any variant/matroid, or
-             the vmapped batched sum solver (query.solve_sum_batch) for
-             batches of sum queries under uniform/partition matroids.
+  query      answered on the cached matrix only, dispatched through the
+             ``core.solvers`` engine registry: ``engine="auto"`` (the
+             default for both ``query`` and ``query_batch``) partitions a
+             batch across the fastest eligible engines carrying the
+             host-parity guarantee — the vmapped batched sum solver for
+             uniform/partition/transversal matroids, the host final-stage
+             solvers (bit-identical selections to ``solve_dmmc``) for
+             everything else. ``engine=<name>`` forces one engine; a
+             query's ``engine_hint`` opts into non-parity engines like the
+             vmapped star/tree greedy ("jit_greedy").
 """
 from __future__ import annotations
 
@@ -29,8 +35,14 @@ import numpy as np
 
 from ...core import geometry
 from ...core.compose import compact_coreset, snapshot_shards
-from ...core.final_solve import SubsetMatroidView, final_solve
+from ...core.final_solve import SubsetMatroidView
 from ...core.matroid import MatroidSpec, make_host_matroid
+from ...core.solvers import (
+    SolveContext,
+    SolveSpec,
+    get_engine,
+    partition_by_engine,
+)
 from ...core.streaming import (
     StreamState,
     ingest_batch,
@@ -40,12 +52,7 @@ from ...core.streaming import (
     snapshot_coreset,
 )
 from .cache import CacheKey, CoresetEntry, DistanceCache, coreset_fingerprint
-from .query import (
-    DiversityQuery,
-    QueryResult,
-    candidate_mask,
-    solve_sum_batch,
-)
+from .query import DiversityQuery, QueryResult, candidate_mask
 
 
 @dataclasses.dataclass
@@ -119,6 +126,18 @@ class DiversityService:
             raise ValueError(
                 f"cats width {cats_arr.shape[1]} != spec gamma "
                 f"{self._gamma_width}"
+            )
+        if (
+            self.spec.kind == "partition"
+            and cats_arr.shape[1] > 1
+            and np.any(cats_arr[:, 1:] >= 0)
+        ):
+            # refuse at the door rather than truncating labels inside the
+            # scan/solvers: a partition matroid is single-label by
+            # definition, multi-label points need a transversal spec
+            raise ValueError(
+                "partition service got a point with >1 category label; "
+                "use a transversal MatroidSpec for multi-label data"
             )
         return cats_arr
 
@@ -298,149 +317,91 @@ class DiversityService:
     # queries
     # ------------------------------------------------------------------
 
-    def _host_matroid(self, entry: CoresetEntry, q: DiversityQuery):
+    def _host_matroid(self, entry: CoresetEntry, spec: SolveSpec):
         m = entry.size
         if self.spec.kind == "general":
             base = make_host_matroid(
-                self.spec, None, None, self.n_offered, q.k, self.oracle
+                self.spec, None, None, self.n_offered, spec.k, self.oracle
             )
             return SubsetMatroidView(base, entry.src_idx)
-        caps = self.caps if q.caps is None else np.asarray(q.caps, np.int32)
-        return make_host_matroid(self.spec, entry.cats, caps, m, q.k)
-
-    def _answer_host(
-        self, entry: CoresetEntry, q: DiversityQuery, cached: bool
-    ) -> QueryResult:
-        matroid = self._host_matroid(entry, q)
-        idxs = np.flatnonzero(
-            candidate_mask(entry.cats, q.allowed_cats)
-        ).tolist()
-        X, val = final_solve(
-            entry.D, matroid, q.k, q.variant, idxs=idxs, gamma=q.gamma
+        caps = (
+            self.caps if spec.caps is None else np.asarray(spec.caps, np.int32)
         )
-        loc = np.asarray(X, np.int64)
-        return QueryResult(
-            indices=entry.src_idx[loc],
-            local_indices=loc,
-            diversity=val,
+        return make_host_matroid(self.spec, entry.cats, caps, m, spec.k)
+
+    def _solve_context(self, entry: CoresetEntry) -> SolveContext:
+        """Registry view of one cache entry (what every engine solves on)."""
+        return SolveContext(
+            D=entry.D,
+            spec=self.spec,
+            cats=entry.cats,
+            caps=self.caps,
+            matroid_fn=lambda spec: self._host_matroid(entry, spec),
+        )
+
+    def _solve_spec(self, entry: CoresetEntry, q: DiversityQuery) -> SolveSpec:
+        return SolveSpec(
+            k=q.k,
             variant=q.variant,
-            engine="host",
-            coreset_size=entry.size,
-            from_cache=cached,
+            gamma=q.gamma,
+            caps=q.caps,
+            allow=candidate_mask(entry.cats, q.allowed_cats),
         )
 
-    def _vmap_eligible(self, q: DiversityQuery) -> bool:
-        return q.variant == "sum" and self.spec.kind in ("uniform", "partition")
-
-    def _answer_vmap(
-        self, entry: CoresetEntry, qs: list[DiversityQuery], cached: bool
-    ) -> list[QueryResult]:
-        m = entry.size
-        if self.spec.kind == "partition":
-            cats1 = jnp.asarray(entry.cats[:, 0], jnp.int32)
-            h = self.spec.num_categories
-            default_caps = self.caps
-        else:  # uniform: one pseudo-category nobody caps
-            cats1 = jnp.zeros((m,), jnp.int32)
-            h = 1
-            default_caps = None
-        kmax = max(q.k for q in qs)
-        caps_b = np.empty((len(qs), h), np.int32)
-        allow_b = np.empty((len(qs), m), bool)
-        for i, q in enumerate(qs):
-            if q.caps is not None:
-                caps_b[i] = np.asarray(q.caps, np.int32)
-            elif default_caps is not None:
-                caps_b[i] = default_caps
-            else:
-                caps_b[i] = m + 1  # effectively uncapped
-            allow_b[i] = candidate_mask(entry.cats, q.allowed_cats)
-        ks = jnp.asarray([q.k for q in qs], jnp.int32)
-        gammas = jnp.asarray([q.gamma for q in qs], jnp.float32)
-        sel, nsel, div = solve_sum_batch(
-            jnp.asarray(entry.D),
-            cats1,
-            jnp.asarray(caps_b),
-            jnp.asarray(allow_b),
-            ks,
-            gammas,
-            kmax=kmax,
-        )
-        sel, nsel, div = np.asarray(sel), np.asarray(nsel), np.asarray(div)
-        out = []
-        for i, q in enumerate(qs):
-            loc = sel[i, : nsel[i]].astype(np.int64)
-            # report the true float64 objective of the selection (the jit
-            # solver accumulates in f32; indices are what it decided on)
-            val = float(
-                np.asarray(entry.D, np.float64)[np.ix_(loc, loc)].sum() / 2.0
-            )
-            out.append(
-                QueryResult(
-                    indices=entry.src_idx[loc],
-                    local_indices=loc,
-                    diversity=val,
-                    variant=q.variant,
-                    engine="vmap",
-                    coreset_size=m,
-                    from_cache=cached,
-                )
-            )
-        return out
-
-    def query(
-        self, q: DiversityQuery, *, engine: str = "host"
-    ) -> QueryResult:
+    def query(self, q: DiversityQuery, *, engine: str = "auto") -> QueryResult:
         """Answer one query on the cached coreset matrix.
 
-        The default host engine is the exact final-stage solver shared with
-        ``solve_dmmc`` — a warm query therefore matches the offline driver's
-        answer bit for bit.
+        The default ``engine="auto"`` (same default as ``query_batch``)
+        picks the fastest registered engine with the host-parity guarantee
+        — the selection, and therefore the canonical objective value,
+        equals the host engine's, which in turn equals ``solve_dmmc`` on
+        the same coreset. ``engine="host"`` forces the reference solver
+        (bit-identical selection order to the offline driver); any
+        registered engine name forces that engine.
         """
-        entry, cached = self._entry()
-        if engine == "vmap":
-            if not self._vmap_eligible(q):
-                raise ValueError(
-                    f"vmap engine supports sum under uniform/partition, got "
-                    f"{q.variant!r} under {self.spec.kind!r}"
-                )
-            return self._answer_vmap(entry, [q], cached)[0]
-        return self._answer_host(entry, q, cached)
+        return self.query_batch([q], engine=engine)[0]
 
     def query_batch(
         self, queries: Sequence[DiversityQuery], *, engine: str = "auto"
     ) -> list[QueryResult]:
         """Answer a batch of heterogeneous queries against ONE cache entry.
 
-        engine='auto' routes sum/uniform/partition queries through the
-        vmapped batched solver and everything else (transversal, general,
-        star/tree/cycle/bipartition) through the host solver; 'host'/'vmap'
-        force a path. The distance matrix is fetched (and possibly built)
-        exactly once per batch regardless of batch size.
+        ``engine="auto"`` partitions the batch across registry engines:
+        each query goes to the fastest eligible engine carrying the
+        host-parity guarantee (sum under uniform/partition/transversal ->
+        the vmapped batched solver; everything else -> the host reference
+        solvers), honoring per-query ``engine_hint`` opt-ins (e.g.
+        "jit_greedy" for approximate star/tree). Any other name forces
+        every query through that engine, raising if one is ineligible
+        ("vmap" is accepted as a legacy alias of "jit_sum"). The distance
+        matrix is fetched (and possibly built) exactly once per batch.
         """
         queries = list(queries)
         if not queries:
             return []
         entry, cached = self._entry()
-        if engine not in ("auto", "host", "vmap"):
-            raise ValueError(engine)
-        if engine == "host":
-            return [self._answer_host(entry, q, cached) for q in queries]
-        vmap_idx = [
-            i for i, q in enumerate(queries) if self._vmap_eligible(q)
-        ]
-        if engine == "vmap" and len(vmap_idx) != len(queries):
-            raise ValueError("vmap engine forced on ineligible queries")
+        ctx = self._solve_context(entry)
+        specs = [self._solve_spec(entry, q) for q in queries]
+        groups = partition_by_engine(
+            ctx,
+            specs,
+            engine=engine,
+            hints=[q.engine_hint for q in queries],
+        )
         results: list[Optional[QueryResult]] = [None] * len(queries)
-        if vmap_idx:
-            for i, r in zip(
-                vmap_idx,
-                self._answer_vmap(
-                    entry, [queries[i] for i in vmap_idx], cached
-                ),
+        for name, idxs in groups.items():
+            eng = get_engine(name)
+            for i, sol in zip(
+                idxs, eng.solve_batch(ctx, [specs[i] for i in idxs])
             ):
-                results[i] = r
-        for i, q in enumerate(queries):
-            if results[i] is None:
-                results[i] = self._answer_host(entry, q, cached)
+                loc = np.asarray(sol.local_indices, np.int64)
+                results[i] = QueryResult(
+                    indices=entry.src_idx[loc],
+                    local_indices=loc,
+                    diversity=sol.value,
+                    variant=queries[i].variant,
+                    engine=sol.engine,
+                    coreset_size=entry.size,
+                    from_cache=cached,
+                )
         return results  # type: ignore[return-value]

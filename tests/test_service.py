@@ -179,10 +179,17 @@ def test_service_matches_solve_dmmc(rng, instance, variant):
         svc.ingest(P[off:off + 97], cats[off:off + 97])
     sol = solve_dmmc(P, k, spec, cats=cats, caps=caps, tau=tau,
                      setting="streaming", variant=variant)
-    res = svc.query(DiversityQuery(k=k, variant=variant))
+    # the host engine is bit-identical to the offline driver: same
+    # selection order, same canonical value
+    res = svc.query(DiversityQuery(k=k, variant=variant), engine="host")
     assert res.indices.tolist() == sol.indices.tolist()
     assert res.diversity == sol.diversity
     assert res.coreset_size == sol.coreset_size
+    # the auto engine (default) carries the parity guarantee: same set,
+    # same canonical value, whatever engine the registry picked
+    auto = svc.query(DiversityQuery(k=k, variant=variant))
+    assert sorted(auto.indices.tolist()) == sorted(res.indices.tolist())
+    assert auto.diversity == res.diversity
 
 
 def test_vmap_engine_matches_host(rng):
@@ -196,13 +203,27 @@ def test_vmap_engine_matches_host(rng):
         for ac in (None, frozenset({0, 1, 2, 3}))
     ]
     hosts = svc.query_batch(qs, engine="host")
-    vmaps = svc.query_batch(qs, engine="vmap")
+    vmaps = svc.query_batch(qs, engine="vmap")  # legacy alias of jit_sum
     for q, a, b in zip(qs, hosts, vmaps):
         assert sorted(a.indices.tolist()) == sorted(b.indices.tolist()), q
-        # host reports its incrementally-accumulated value; vmap recomputes
-        # the exact objective of the same selection — compare loosely
-        assert b.diversity == pytest.approx(a.diversity, rel=1e-4)
-        assert a.engine == "host" and b.engine == "vmap"
+        # both engines report the canonical (sorted, float64) objective of
+        # their selection, so agreement on the set means equal floats
+        assert b.diversity == a.diversity
+        assert a.engine == "host_local_search" and b.engine == "jit_sum"
+
+
+def test_query_default_engine_consistency(rng):
+    """query() and query_batch() share the engine="auto" default: one
+    query answered alone equals the same query answered in a batch."""
+    P, cats, caps, spec, k = _partition_instance(rng, n=300)
+    svc = DiversityService(spec, k, tau=12, caps=caps)
+    svc.ingest(P, cats)
+    q = DiversityQuery(k=k)
+    one = svc.query(q)
+    batch = svc.query_batch([q])[0]
+    assert one.engine == batch.engine == "jit_sum"
+    assert one.indices.tolist() == batch.indices.tolist()
+    assert one.diversity == batch.diversity
 
 
 def test_uniform_vmap_engine(rng):
@@ -210,7 +231,7 @@ def test_uniform_vmap_engine(rng):
     spec = MatroidSpec("uniform")
     svc = DiversityService(spec, 6, tau=12)
     svc.ingest(P)
-    a = svc.query(DiversityQuery(k=6))
+    a = svc.query(DiversityQuery(k=6), engine="host")
     b = svc.query(DiversityQuery(k=6), engine="vmap")
     assert sorted(a.indices.tolist()) == sorted(b.indices.tolist())
 
@@ -242,9 +263,38 @@ def test_transversal_batch_independent(rng):
     svc = DiversityService(spec, k, tau=10)
     svc.ingest(P, cats)
     m = TransversalMatroid(cats, spec.num_categories)
-    for r in svc.query_batch([DiversityQuery(k=kk) for kk in (2, 3)]):
+    qs = [DiversityQuery(k=kk) for kk in (2, 3)]
+    auto = svc.query_batch(qs)
+    hosts = svc.query_batch(qs, engine="host")
+    for r, hr in zip(auto, hosts):
         assert m.is_independent(list(r.indices))
-        assert r.engine == "host"  # transversal is host-path only
+        # transversal sum now runs the jit batch engine with host parity
+        assert r.engine == "jit_sum"
+        assert hr.engine == "host_local_search"
+        assert sorted(r.indices.tolist()) == sorted(hr.indices.tolist())
+        assert r.diversity == hr.diversity
+
+
+def test_transversal_star_tree_hint_engines(rng):
+    """star/tree queries stay on the exact host engine under auto, and
+    opt into the vmapped greedy via engine_hint (never silently)."""
+    P, cats, _, spec, k = _transversal_instance(rng)
+    svc = DiversityService(spec, k, tau=10)
+    svc.ingest(P, cats)
+    m = TransversalMatroid(cats, spec.num_categories)
+    for variant in ("star", "tree"):
+        exact = svc.query(DiversityQuery(k=3, variant=variant))
+        fast = svc.query(
+            DiversityQuery(k=3, variant=variant, engine_hint="jit_greedy")
+        )
+        assert exact.engine == "host_exhaustive"
+        assert fast.engine == "jit_greedy"
+        assert m.is_independent(list(fast.indices))
+        # greedy is a heuristic: never better than the exact optimum
+        assert fast.diversity <= exact.diversity + 1e-9
+        # hint that doesn't apply falls back to the auto policy
+        r = svc.query(DiversityQuery(k=3, engine_hint="jit_greedy"))
+        assert r.engine == "jit_sum"
 
 
 # --------------------------------------------------------------------------
@@ -271,7 +321,7 @@ def test_warm_batch_of_32_reuses_cached_matrix(rng):
     assert len(out) == 32
     assert all(r.from_cache for r in out)
     assert svc.cache.stats.builds == 1, "warm batch recomputed pdist"
-    assert {r.engine for r in out} == {"host", "vmap"}
+    assert {r.engine for r in out} == {"host_exhaustive", "jit_sum"}
     # heterogeneous ks answered
     assert sorted({len(r.indices) for r in out if r.variant == "sum"}) == [
         2, 3, 4, 5

@@ -1,0 +1,357 @@
+"""Solver-engine registry: coverage, dispatch policy, cross-engine parity
+(the acceptance bar: every engine eligible for a (variant, matroid) cell
+returns the same objective as the host reference engine), kmax bucketing,
+and the multi-label partition guard."""
+import numpy as np
+import pytest
+
+from conftest import make_clustered_points
+from repro.core import solve_dmmc
+from repro.core.matroid import (
+    MatroidSpec,
+    PartitionMatroid,
+    TransversalMatroid,
+    UniformMatroid,
+)
+from repro.core.solvers import (
+    MATROID_KINDS,
+    EngineSolution,
+    SolveContext,
+    SolveSpec,
+    SolverEngine,
+    coverage_matrix,
+    get_engine,
+    partition_by_engine,
+    register_engine,
+    registered_engines,
+    resolve_engine,
+    select_engine,
+    selection_value,
+)
+from repro.core.solvers import base as solvers_base
+from repro.core.solvers.jit_sum import bucket_pow2, solve_sum_batch
+from repro.core.diversity import VARIANTS
+
+
+def _dist(P):
+    D = np.sqrt(((P[:, None] - P[None, :]) ** 2).sum(-1)).astype(np.float32)
+    np.fill_diagonal(D, 0.0)
+    return D
+
+
+def _ctx_for(kind, rng, m=32, h=4, gamma=2):
+    """Random coreset-sized SolveContext + a host-oracle factory."""
+    P = make_clustered_points(rng, n=m, d=5)
+    D = _dist(P)
+    if kind == "uniform":
+        spec = MatroidSpec("uniform")
+        return SolveContext(
+            D=D, spec=spec, cats=None, caps=None,
+            matroid_fn=lambda s: UniformMatroid(m, s.k),
+        )
+    if kind == "partition":
+        cats = rng.integers(0, h, (m, 1)).astype(np.int32)
+        caps = np.full(h, 2, np.int32)
+        spec = MatroidSpec("partition", num_categories=h, gamma=1)
+        return SolveContext(
+            D=D, spec=spec, cats=cats, caps=caps,
+            matroid_fn=lambda s: PartitionMatroid(
+                cats, caps if s.caps is None else np.asarray(s.caps)
+            ),
+        )
+    if kind == "transversal":
+        cats = np.full((m, gamma), -1, np.int32)
+        cats[:, 0] = rng.integers(0, h, m)
+        extra = rng.random(m) < 0.4
+        cats[extra, 1] = rng.integers(0, h, extra.sum())
+        spec = MatroidSpec("transversal", num_categories=h, gamma=gamma)
+        return SolveContext(
+            D=D, spec=spec, cats=cats, caps=None,
+            matroid_fn=lambda s: TransversalMatroid(cats, h),
+        )
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# registry + dispatch policy
+# --------------------------------------------------------------------------
+
+
+def test_coverage_matrix_shape_and_policy():
+    cm = coverage_matrix()
+    assert set(cm) == {(v, k) for v in VARIANTS for k in MATROID_KINDS}
+    # the jit sum engine covers exactly uniform/partition/transversal
+    for kind in ("uniform", "partition", "transversal"):
+        assert cm[("sum", kind)][0] == "jit_sum"
+        for variant in ("star", "tree"):
+            assert cm[(variant, kind)][0] == "jit_greedy"
+    assert cm[("sum", "general")] == ["host_local_search"]
+    # every cell keeps a host reference engine
+    for (variant, kind), engines in cm.items():
+        host = "host_local_search" if variant == "sum" else "host_exhaustive"
+        assert host in engines, (variant, kind)
+
+
+def test_auto_selects_parity_engines_only(rng):
+    ctx = _ctx_for("uniform", rng)
+    # sum: the jit engine is parity -> auto picks it
+    assert select_engine(ctx, SolveSpec(k=3)).name == "jit_sum"
+    # star/tree: jit_greedy is NOT parity -> auto keeps the exact host
+    for variant in ("star", "tree"):
+        e = select_engine(ctx, SolveSpec(k=3, variant=variant))
+        assert e.name == "host_exhaustive"
+        # ...unless explicitly hinted
+        e = select_engine(
+            ctx, SolveSpec(k=3, variant=variant), hint="jit_greedy"
+        )
+        assert e.name == "jit_greedy"
+    # a hint that does not apply falls back to auto instead of failing
+    e = select_engine(ctx, SolveSpec(k=3, variant="cycle"), hint="jit_greedy")
+    assert e.name == "host_exhaustive"
+    # forcing an ineligible engine raises
+    with pytest.raises(ValueError):
+        resolve_engine("jit_sum", ctx, SolveSpec(k=3, variant="cycle"))
+    with pytest.raises(ValueError):
+        get_engine("definitely_not_registered")
+
+
+def test_partition_by_engine_groups(rng):
+    ctx = _ctx_for("partition", rng)
+    specs = [
+        SolveSpec(k=2),
+        SolveSpec(k=3, variant="tree"),
+        SolveSpec(k=2),
+        SolveSpec(k=2, variant="star"),
+    ]
+    groups = partition_by_engine(ctx, specs, engine="auto",
+                                 hints=[None, "jit_greedy", None, None])
+    assert groups == {
+        "jit_sum": [0, 2], "jit_greedy": [1], "host_exhaustive": [3]
+    }
+    # forcing host resolves per-variant to the two host engines
+    groups = partition_by_engine(ctx, specs, engine="host")
+    assert groups == {
+        "host_local_search": [0, 2], "host_exhaustive": [1, 3]
+    }
+
+
+def test_register_custom_engine(rng):
+    class EchoEngine(SolverEngine):
+        name = "echo"
+        priority = 1
+        exact_parity = False  # never picked by auto
+
+        def supports(self, variant, matroid_kind):
+            return variant == "sum"
+
+        def solve_one(self, ctx, spec):
+            loc = np.flatnonzero(spec.allow_mask(ctx.size))[: spec.k]
+            return EngineSolution(
+                local_indices=loc.astype(np.int64),
+                value=selection_value(ctx.D, loc, spec.variant),
+                engine=self.name,
+            )
+
+    saved = dict(solvers_base._REGISTRY)
+    try:
+        register_engine(EchoEngine())
+        with pytest.raises(ValueError):
+            register_engine(EchoEngine())  # duplicate name
+        ctx = _ctx_for("uniform", rng)
+        spec = SolveSpec(k=3)
+        # explicit request works, auto still refuses non-parity engines
+        assert resolve_engine("echo", ctx, spec).name == "echo"
+        assert select_engine(ctx, spec).name == "jit_sum"
+        sol = resolve_engine("echo", ctx, spec).solve_one(ctx, spec)
+        assert sol.local_indices.tolist() == [0, 1, 2]
+        assert "echo" in [e.name for e in registered_engines()]
+    finally:
+        solvers_base._REGISTRY.clear()
+        solvers_base._REGISTRY.update(saved)
+
+
+# --------------------------------------------------------------------------
+# cross-engine parity property (acceptance criterion)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["uniform", "partition", "transversal"])
+def test_cross_engine_sum_parity_property(rng, kind):
+    """For random coresets, every parity engine eligible for a cell
+    returns the same selection set and the same canonical objective as
+    the host engine — including per-query caps and candidate filters."""
+    for trial in range(6):
+        ctx = _ctx_for(kind, rng)  # m fixed at 32: one jit shape
+        k = int(rng.integers(2, 6))
+        caps = None
+        if kind == "partition" and trial % 2:
+            caps = tuple(rng.integers(1, 3, ctx.spec.num_categories).tolist())
+        allow = None
+        if trial % 3 == 0:
+            allow = rng.random(ctx.size) < 0.8
+        spec = SolveSpec(k=k, variant="sum", caps=caps, allow=allow)
+        host = resolve_engine("host", ctx, spec).solve_one(ctx, spec)
+        for e in registered_engines():
+            if not (e.exact_parity and e.eligible(ctx, spec)):
+                continue
+            got = e.solve_one(ctx, spec)
+            assert sorted(got.local_indices.tolist()) == sorted(
+                host.local_indices.tolist()
+            ), (kind, trial, k, e.name)
+            assert got.value == host.value, (kind, trial, k, e.name)
+
+
+def test_transversal_jit_batch_matches_host_local_search(rng):
+    """The tentpole assertion: transversal sum queries run through the jit
+    batch engine and land on the host local-search answer."""
+    ctx = _ctx_for("transversal", rng)
+    specs = [SolveSpec(k=k) for k in (2, 3, 4, 5)]
+    jit = get_engine("jit_sum")
+    assert jit.eligible(ctx, specs[0])
+    sols = jit.solve_batch(ctx, specs)
+    from repro.core.solvers.local_search import local_search_sum
+
+    for spec, sol in zip(specs, sols):
+        X, _val, _ = local_search_sum(
+            ctx.D, ctx.matroid_fn(spec), spec.k, list(range(ctx.size))
+        )
+        assert sol.local_indices.tolist() == X  # same order, even
+        assert sol.value == selection_value(ctx.D, X, "sum")
+        assert ctx.matroid_fn(spec).is_independent(
+            sol.local_indices.tolist()
+        )
+
+
+def test_solve_dmmc_engine_dispatch(rng):
+    P = make_clustered_points(rng, n=200)
+    h = 4
+    cats = rng.integers(0, h, (200, 1)).astype(np.int32)
+    caps = np.full(h, 2, np.int32)
+    spec = MatroidSpec("partition", num_categories=h, gamma=1)
+    kw = dict(cats=cats, caps=caps, tau=10, setting="streaming")
+    a = solve_dmmc(P, 4, spec, **kw)  # default engine="host"
+    b = solve_dmmc(P, 4, spec, engine="auto", **kw)
+    c = solve_dmmc(P, 4, spec, engine="jit_sum", **kw)
+    assert sorted(a.indices.tolist()) == sorted(b.indices.tolist())
+    assert b.indices.tolist() == c.indices.tolist()
+    assert a.diversity == b.diversity == c.diversity
+
+
+# --------------------------------------------------------------------------
+# kmax bucketing (jit cache stability across novel max-k values)
+# --------------------------------------------------------------------------
+
+
+def test_bucket_pow2():
+    assert [bucket_pow2(n) for n in (1, 2, 3, 4, 5, 7, 8, 9, 31)] == [
+        1, 2, 4, 4, 8, 8, 8, 16, 32
+    ]
+
+
+def test_kmax_bucketing_reuses_compiled_solver(rng):
+    ctx = _ctx_for("partition", rng)
+    jit = get_engine("jit_sum")
+    # warm the (kmax=8, B=1) bucket, then novel max-k values in (4, 8]
+    # must NOT recompile; answers must be unaffected by the padding
+    base = {k: jit.solve_one(ctx, SolveSpec(k=k)) for k in (5, 8)}
+    if hasattr(solve_sum_batch, "_cache_size"):
+        before = solve_sum_batch._cache_size()
+        for k in (6, 7, 8):
+            jit.solve_one(ctx, SolveSpec(k=k))
+        assert solve_sum_batch._cache_size() == before, (
+            "novel max-k inside one power-of-two bucket recompiled"
+        )
+    # same query, different batch compositions -> same answer
+    again = jit.solve_batch(ctx, [SolveSpec(k=5), SolveSpec(k=8)])
+    assert again[0].local_indices.tolist() == base[5].local_indices.tolist()
+    assert again[1].local_indices.tolist() == base[8].local_indices.tolist()
+
+
+def test_unknown_engine_hint_raises(rng):
+    """A typo'd hint must not silently downgrade to a slower engine."""
+    ctx = _ctx_for("uniform", rng)
+    spec = SolveSpec(k=3, variant="star")
+    with pytest.raises(ValueError, match="unknown solver engine"):
+        select_engine(ctx, spec, hint="jit_greddy")
+    # ...while a registered-but-ineligible hint still falls back softly
+    assert select_engine(ctx, SolveSpec(k=3, variant="cycle"),
+                         hint="jit_greedy").name == "host_exhaustive"
+
+
+def test_final_solve_accepts_1d_cats(rng):
+    """final_solve(cats=...) with single-label 1-D cats reaches the jit
+    partition path (SolveContext normalizes the shape)."""
+    from repro.core.final_solve import final_solve
+
+    m, h = 32, 4
+    D = _dist(make_clustered_points(rng, n=m, d=4))
+    cats1d = rng.integers(0, h, m).astype(np.int32)
+    caps = np.full(h, 2, np.int32)
+    matroid = PartitionMatroid(cats1d, caps)
+    X_jit, v_jit = final_solve(
+        D, matroid, 4, "sum", engine="jit_sum", cats=cats1d, caps=caps
+    )
+    X_host, v_host = final_solve(D, matroid, 4, "sum")
+    assert sorted(X_jit) == sorted(X_host)
+    assert v_jit == v_host
+
+
+def test_final_solve_preserves_idxs_order(rng):
+    """Host tie-breaks are visit-order dependent: with duplicated points,
+    the first idxs entry of a tied pair wins, whatever order idxs is in —
+    and jit engines refuse the order-sensitive request under auto."""
+    from repro.core.final_solve import final_solve
+
+    P = make_clustered_points(rng, n=8, d=3)
+    P[5] = P[2]  # exact duplicate: rows 2 and 5 tie everywhere
+    D = _dist(P)
+    matroid = UniformMatroid(8, 2)
+    fwd, _ = final_solve(D, matroid, 2, "sum", idxs=[2, 5, 0, 7])
+    rev, _ = final_solve(D, matroid, 2, "sum", idxs=[5, 2, 0, 7])
+    assert (2 in fwd) != (5 in fwd) and (2 in rev) != (5 in rev)
+    swap = {2: 5, 5: 2}
+    assert sorted(swap.get(i, i) for i in rev) == sorted(fwd)
+    # auto on a non-ascending idxs request stays on the host engine
+    ctx = _ctx_for("uniform", rng)
+    spec = SolveSpec(k=2, idxs=(5, 2, 0))
+    assert not get_engine("jit_sum").eligible(ctx, spec)
+    assert select_engine(ctx, spec).name == "host_local_search"
+    # ascending idxs keep the fast path
+    assert select_engine(ctx, SolveSpec(k=2, idxs=(0, 2, 5))).name == "jit_sum"
+
+
+# --------------------------------------------------------------------------
+# multi-label partition guard
+# --------------------------------------------------------------------------
+
+
+def test_multilabel_partition_guard(rng):
+    m, h = 16, 3
+    D = _dist(make_clustered_points(rng, n=m, d=4))
+    cats = np.full((m, 2), -1, np.int32)
+    cats[:, 0] = rng.integers(0, h, m)
+    cats[2, 1] = 1  # one point with a second real label
+    caps = np.full(h, 2, np.int32)
+    spec = MatroidSpec("partition", num_categories=h, gamma=2)
+    ctx = SolveContext(
+        D=D, spec=spec, cats=cats, caps=caps,
+        matroid_fn=lambda s: PartitionMatroid(cats, caps),
+    )
+    q = SolveSpec(k=3)
+    # the jit engine refuses (no silent truncation of cats[:, 1:])...
+    assert not get_engine("jit_sum").eligible(ctx, q)
+    with pytest.raises(ValueError):
+        resolve_engine("jit_sum", ctx, q)
+    # ...auto routes to host, whose oracle raises the descriptive error
+    eng = select_engine(ctx, q)
+    assert eng.name == "host_local_search"
+    with pytest.raises(ValueError, match="transversal"):
+        eng.solve_one(ctx, q)
+    # benign -1 padding in extra columns stays on the fast path
+    cats_pad = cats.copy()
+    cats_pad[:, 1] = -1
+    ctx2 = SolveContext(
+        D=D, spec=spec, cats=cats_pad, caps=caps,
+        matroid_fn=lambda s: PartitionMatroid(cats_pad, caps),
+    )
+    assert select_engine(ctx2, q).name == "jit_sum"
