@@ -2,9 +2,12 @@
 
 The paper's Lemma backing both the MapReduce construction (§4.2) and the
 sharded serving layer: if S_1, ..., S_m partition S and T_i is an
-(eps, k)-coreset of S_i, then U_i T_i is an (eps, k)-coreset of S. Shards
-can therefore build coresets independently (``ingest_batch_sharded``) and
-be combined after the fact:
+(eps, k)-coreset of S_i, then U_i T_i is an (eps, k)-coreset of S. *Any*
+partition of the stream qualifies — the row-granular round-robin deal of
+the ``vmap``/``shard_map`` drives (``ingest_batch_sharded`` /
+``ingest_batch_sharded_mapped``) and the batch-granular deal of the
+serving layer's ``pipeline`` placement alike. Shards build coresets
+independently and are combined after the fact:
 
 ``union_coresets``       plain buffer concatenation — the exact union, no
                          quality loss, size grows with the shard count;
@@ -16,7 +19,9 @@ be combined after the fact:
                          delegates (with their global ``src_idx`` kept)
                          through the tau-controlled scan — a coreset of a
                          coreset, i.e. still a coreset of S with the eps
-                         compounding per §3.
+                         compounding per §3. Accepts a stacked state (the
+                         vmap/shard_map drives) or a list of per-shard
+                         states (the pipeline placement).
 """
 from __future__ import annotations
 

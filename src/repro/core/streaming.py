@@ -14,7 +14,7 @@ these three; batched ingestion is bit-identical to a single pass because the
 scan branches only on ``st.n_seen``.
 
 The scan is *blocked*: each step consumes ``block_size`` points. One
-vectorized distance pass (``kernels.ops.block_center_dists``) plus a
+fused distance+classification pass (``kernels.ops.center_precheck``) plus a
 matroid-specific precheck classifies every point in the block as a no-op
 (within threshold of an existing center AND its HANDLE would not add a
 delegate) or as active; runs of no-ops are consumed with O(1) masked
@@ -24,10 +24,30 @@ error margin of a decision boundary — replay the exact per-point step.
 ``block_size=1`` recovers the original per-point scan; both produce
 bit-identical states (asserted by the equivalence/property tests).
 
-``ingest_batch_sharded`` vmaps the same scan over a leading shard axis: per
-§3 composability (and the MapReduce formulation of arXiv:1605.05590),
+The per-point step itself is *branchless*: every decision (open a center,
+add a delegate, shrink, merge a dead center's delegate) is computed as a
+mask and applied as a dense ``jnp.where``-selected update instead of a
+``lax.cond`` ladder. Under ``vmap``/``shard_map`` a batched ``lax.cond``
+lowers to select-both-branches, so the historical cond ladder made every
+shard pay every branch of every step; the masked form pays each update
+exactly once. The rare *expensive* branches (restructure merges) stay real
+branches via ``_cond_once`` — a single-trip ``lax.while_loop``, which vmap
+keeps conditional (zero trips when no lane triggers). The historical
+cond-ladder step is retained as ``step_impl="reference"`` — the bit-exact
+Alg.-2 semantics the branchless scan is defined by and tested against
+(tests/test_branchless_scan.py).
+
+Sharded ingestion has two drives over the same per-shard scan:
+
+* ``ingest_batch_sharded`` — ``jit(vmap)`` over a leading shard axis
+  (single-device; the branchless step is what makes this fast);
+* ``ingest_batch_sharded_mapped`` — ``shard_map`` over a 1-D device mesh
+  (per-device shard groups run as independent programs, vmapping only the
+  shards local to each device).
+
+Per §3 composability (and the MapReduce formulation of arXiv:1605.05590),
 shards build coresets independently and compose by union — see
-``core/compose.py`` for the union/merge half.
+``core/compose.py`` for the union/merge half and placement resolution.
 
 State (all static shapes; TCAP centers, SLOT delegate slots per center):
   R          scalar estimate (diameter for Alg. 2; radius for the variant)
@@ -66,6 +86,8 @@ from .matroid import MatroidSpec
 
 _BIG = jnp.float32(jnp.finfo(jnp.float32).max)
 
+STEP_IMPLS = ("branchless", "reference")
+
 
 class StreamState(NamedTuple):
     R: jnp.ndarray
@@ -87,11 +109,62 @@ def _dists_to_centers(x, centers, cvalid):
     return jnp.where(cvalid, d, _BIG)
 
 
-def _handle(spec: MatroidSpec, k: int, caps, st: StreamState, z, x, xc, xsrc):
-    """Alg. 2 HANDLE(x, z, D_z). Returns updated state (+overflow count)."""
+def _cond_once(pred, fn, st):
+    """``lax.cond(pred, fn, id)`` that stays a *real* branch under vmap.
+
+    A batched ``lax.cond`` lowers to select-both-branches; a batched
+    ``lax.while_loop`` executes its body only while some lane's predicate
+    holds (with per-lane masking of the results). Wrapping a rarely-taken,
+    expensive branch in a single-trip while_loop therefore keeps its skip
+    under vmap — steps where no lane triggers pay nothing — while staying
+    bit-identical to the cond form.
+    """
+
+    def body(carry):
+        s, flag = carry
+        return fn(s), jnp.zeros_like(flag)
+
+    out, _ = jax.lax.while_loop(lambda c: c[1], body, (st, pred))
+    return out
+
+
+# --------------------------------------------------------------------------
+# branchless masked primitives (the default scan)
+# --------------------------------------------------------------------------
+
+
+def _open_center_masked(st: StreamState, x, xc, xsrc, enable) -> StreamState:
+    """Open a center at the first free slot iff ``enable``; otherwise every
+    write puts the existing value back (a bit-exact no-op)."""
+    slot = jnp.argmin(st.cvalid)  # first invalid center (all valid -> 0)
+    return st._replace(
+        centers=st.centers.at[slot].set(
+            jnp.where(enable, x, st.centers[slot])
+        ),
+        cvalid=st.cvalid.at[slot].set(st.cvalid[slot] | enable),
+        dp=st.dp.at[slot, 0].set(jnp.where(enable, x, st.dp[slot, 0])),
+        dc=st.dc.at[slot, 0].set(jnp.where(enable, xc, st.dc[slot, 0])),
+        dv=st.dv.at[slot, 0].set(st.dv[slot, 0] | enable),
+        ds=st.ds.at[slot, 0].set(jnp.where(enable, xsrc, st.ds[slot, 0])),
+    )
+
+
+def _handle_masked(
+    spec: MatroidSpec, k: int, caps, st: StreamState, z, x, xc, xsrc, enable
+) -> tuple[StreamState, jnp.ndarray]:
+    """Alg. 2 HANDLE(x, z, D_z) as masked dense updates.
+
+    The add decision is computed unconditionally (cheap gathers/reductions
+    over one center's slot buffer); the *write pass* — and, for
+    transversal, the greedy-matching shrink that follows a successful add —
+    runs under a ``_cond_once`` guard, so a rejected or disabled HANDLE
+    costs no buffer traffic even under vmap. Executed writes are ``where``-
+    masked per field, which keeps lanes that didn't trigger bit-exact.
+    Returns ``(state, add)`` — ``add`` is the did-anything-change bit the
+    blocked scan uses to decide precheck staleness.
+    """
     slots_v = st.dv[z]  # (SLOT,)
     cnt = jnp.sum(slots_v.astype(jnp.int32))
-    slot_cap = slots_v.shape[0]
     free_slot = jnp.argmin(slots_v)  # first False (all True -> 0, guarded)
     has_room = ~jnp.all(slots_v)
 
@@ -105,6 +178,114 @@ def _handle(spec: MatroidSpec, k: int, caps, st: StreamState, z, x, xc, xsrc):
         forced = jnp.int32(0)
     elif spec.kind == "transversal":
         # count of delegates holding each category of x
+        match = (st.dc[z][:, :, None] == xc[None, None, :]) & (
+            xc[None, None, :] >= 0
+        )  # (SLOT, gamma, gamma_x)
+        holds = jnp.any(match, axis=1) & slots_v[:, None]  # (SLOT, gamma_x)
+        cnts = jnp.sum(holds.astype(jnp.int32), axis=0)  # (gamma_x,)
+        short = (cnts < k) & (xc >= 0)
+        want = jnp.any(short)
+        forced = (want & ~has_room & enable).astype(jnp.int32)
+        add = want
+    else:  # pragma: no cover
+        raise ValueError(f"jit HANDLE not defined for {spec.kind!r}")
+
+    add = add & has_room & enable
+    st = st._replace(overflow=st.overflow + forced)
+
+    def apply_add(st: StreamState) -> StreamState:
+        st = st._replace(
+            dp=st.dp.at[z, free_slot].set(
+                jnp.where(add, x, st.dp[z, free_slot])
+            ),
+            dc=st.dc.at[z, free_slot].set(
+                jnp.where(add, xc, st.dc[z, free_slot])
+            ),
+            dv=st.dv.at[z, free_slot].set(st.dv[z, free_slot] | add),
+            ds=st.ds.at[z, free_slot].set(
+                jnp.where(add, xsrc, st.ds[z, free_slot])
+            ),
+        )
+        if spec.kind == "transversal":
+            # masked shrink: a greedy matching covering k slots is a
+            # witnessed independent size-k subset — keep exactly those
+            # slots (post-add buffers, like the historical cond'd _shrink)
+            from .solvers.matching import greedy_matching_slots
+
+            slots_v2 = st.dv[z]
+            _used, matched = greedy_matching_slots(
+                st.dc[z], slots_v2, spec.num_categories
+            )
+            size = jnp.sum(matched.astype(jnp.int32))
+            do = add & (size >= k)
+            st = st._replace(
+                dv=st.dv.at[z].set(
+                    jnp.where(do, matched & slots_v2, slots_v2)
+                )
+            )
+        return st
+
+    return _cond_once(add, apply_add, st), add
+
+
+def _merge_delegates(spec, k, caps, st: StreamState, dead_mask):
+    """Alg. 2 restructure merge: delegates of dropped centers are HANDLE'd
+    into their nearest surviving center.
+
+    The tcap*slot fori_loop runs only when some center actually died — the
+    ``_cond_once`` guard keeps that skip real even under vmap (a filter pass
+    that keeps every center must not pay the merge loop on the scan's
+    steady-state steps). The loop body itself is branchless: distance +
+    masked HANDLE per slot."""
+    tcap, slot_n = st.dv.shape
+
+    def per_slot(i, st):
+        ci, si = i // slot_n, i % slot_n
+        en = dead_mask[ci] & st.dv[ci, si]
+        x = st.dp[ci, si]
+        d = _dists_to_centers(x, st.centers, st.cvalid)
+        z = jnp.argmin(d)
+        st, _add = _handle_masked(
+            spec, k, caps, st, z, x, st.dc[ci, si], st.ds[ci, si], en
+        )
+        return st
+
+    def run_merge(st: StreamState) -> StreamState:
+        st = jax.lax.fori_loop(0, tcap * slot_n, per_slot, st)
+        # clear dropped centers' own buffers
+        return st._replace(dv=st.dv & ~dead_mask[:, None])
+
+    return _cond_once(jnp.any(dead_mask), run_merge, st)
+
+
+# --------------------------------------------------------------------------
+# reference cond-ladder primitives (``step_impl="reference"``)
+#
+# The historical per-point step, kept verbatim: nested lax.cond dispatch on
+# (first | second | general), cond'd HANDLE add + shrink, cond'd merge loop.
+# This is the bit-exact Alg.-2 semantics the branchless step is defined by;
+# tests/test_branchless_scan.py asserts field-for-field state identity
+# between the two across matroid kinds, variants, block sizes and shards.
+# --------------------------------------------------------------------------
+
+
+def _handle_ref(spec: MatroidSpec, k: int, caps, st: StreamState, z, x, xc,
+                xsrc):
+    """Alg. 2 HANDLE(x, z, D_z). Returns updated state (+overflow count)."""
+    slots_v = st.dv[z]  # (SLOT,)
+    cnt = jnp.sum(slots_v.astype(jnp.int32))
+    free_slot = jnp.argmin(slots_v)  # first False (all True -> 0, guarded)
+    has_room = ~jnp.all(slots_v)
+
+    if spec.kind == "uniform":
+        add = cnt < k
+        forced = jnp.int32(0)
+    elif spec.kind == "partition":
+        c = xc[0]
+        same = slots_v & (st.dc[z, :, 0] == c)
+        add = (cnt < k) & (jnp.sum(same.astype(jnp.int32)) < caps[c])
+        forced = jnp.int32(0)
+    elif spec.kind == "transversal":
         match = (st.dc[z][:, :, None] == xc[None, None, :]) & (
             xc[None, None, :] >= 0
         )  # (SLOT, gamma, gamma_x)
@@ -131,16 +312,15 @@ def _handle(spec: MatroidSpec, k: int, caps, st: StreamState, z, x, xc, xsrc):
     st = st._replace(overflow=st.overflow + forced)
 
     if spec.kind == "transversal":
-        st = jax.lax.cond(add, lambda s: _shrink(spec, k, s, z), lambda s: s, st)
+        st = jax.lax.cond(
+            add, lambda s: _shrink_ref(spec, k, s, z), lambda s: s, st
+        )
     return st
 
 
-def _shrink(spec: MatroidSpec, k: int, st: StreamState, z):
+def _shrink_ref(spec: MatroidSpec, k: int, st: StreamState, z):
     """Greedy-matching shrink: if a greedy matching of D_z covers k slots,
-    keep exactly those slots (a witnessed independent set of size k). The
-    matching loop itself lives in ``solvers.matching`` (shared with the
-    batched transversal solver's machinery) and is bit-identical to the
-    historical inline version."""
+    keep exactly those slots (a witnessed independent set of size k)."""
     from .solvers.matching import greedy_matching_slots
 
     slots_v = st.dv[z]
@@ -155,13 +335,8 @@ def _shrink(spec: MatroidSpec, k: int, st: StreamState, z):
     return jax.lax.cond(size >= k, do_shrink, lambda s: s, st)
 
 
-def _merge_delegates(spec, k, caps, st: StreamState, dead_mask):
-    """Alg. 2 restructure merge: delegates of dropped centers are HANDLE'd
-    into their nearest surviving center.
-
-    The tcap*slot fori_loop runs only when some center actually died — a
-    filter pass that keeps every center (all-False ``dead_mask``) is a no-op
-    and must not pay the merge loop on the scan's steady-state steps."""
+def _merge_delegates_ref(spec, k, caps, st: StreamState, dead_mask):
+    """The cond-ladder restructure merge (reference semantics)."""
     tcap, slot_n = st.dv.shape
 
     def per_slot(i, st):
@@ -172,13 +347,14 @@ def _merge_delegates(spec, k, caps, st: StreamState, dead_mask):
             x = st.dp[ci, si]
             d = _dists_to_centers(x, st.centers, st.cvalid)
             z = jnp.argmin(d)
-            return _handle(spec, k, caps, st, z, x, st.dc[ci, si], st.ds[ci, si])
+            return _handle_ref(
+                spec, k, caps, st, z, x, st.dc[ci, si], st.ds[ci, si]
+            )
 
         return jax.lax.cond(is_live_del, do, lambda s: s, st)
 
     def run_merge(st: StreamState) -> StreamState:
         st = jax.lax.fori_loop(0, tcap * slot_n, per_slot, st)
-        # clear dropped centers' own buffers
         return st._replace(dv=st.dv & ~dead_mask[:, None])
 
     return jax.lax.cond(jnp.any(dead_mask), run_merge, lambda s: s, st)
@@ -252,21 +428,18 @@ def snapshot_coreset(st: StreamState) -> Coreset:
     )
 
 
-def _make_step(spec: MatroidSpec, k: int, tau: int, caps_arr, variant: str,
-               eps: float, c_const: int):
-    """Build the per-point Alg.-2 scan step (the bit-exact reference
-    semantics both the per-point and the blocked scans are defined by)."""
+def _make_step_branchless(spec: MatroidSpec, k: int, tau: int, caps_arr,
+                          variant: str, eps: float, c_const: int):
+    """Branchless masked-update per-point step (the default scan step).
 
-    def open_center(st: StreamState, x, xc, xsrc) -> StreamState:
-        slot = jnp.argmin(st.cvalid)
-        return st._replace(
-            centers=st.centers.at[slot].set(x),
-            cvalid=st.cvalid.at[slot].set(True),
-            dp=st.dp.at[slot, 0].set(x),
-            dc=st.dc.at[slot, 0].set(xc),
-            dv=st.dv.at[slot, 0].set(True),
-            ds=st.ds.at[slot, 0].set(xsrc),
-        )
+    Every per-point decision becomes a mask over one dense update pass:
+    distances/argmin are computed once, the (first | second | open | handle)
+    cases are disjoint enables over masked writes, and ``n_seen`` advances
+    by the validity bit. Only the restructure merges — rare and genuinely
+    expensive — remain real branches, via ``_cond_once`` (vmap-skippable).
+    Bit-identical to ``_make_step_reference`` (parity suite) because every
+    masked-off write puts the existing value back.
+    """
 
     def restructure_radius(st: StreamState) -> StreamState:
         """tau-variant: while #centers > tau: R *= 2; filter; merge."""
@@ -291,6 +464,107 @@ def _make_step(spec: MatroidSpec, k: int, tau: int, caps_arr, variant: str,
         dead = st.cvalid & ~keep
         st = st._replace(cvalid=keep)
         return _merge_delegates(spec, k, caps_arr, st, dead)
+
+    def step(st: StreamState, inp):
+        x, xc, xsrc, v = inp
+        t = st.n_seen
+        is_first = v & (t == 0)
+        is_second = v & (t == 1)
+        is_general = v & (t >= 2)
+
+        # one distance pass against the pre-step centers (first/second lanes
+        # read garbage here; their enables mask every use of it)
+        dists = _dists_to_centers(x, st.centers, st.cvalid)
+        z = jnp.argmin(dists)
+        dmin = dists[z]
+        if variant == "diameter":
+            thr_new = 2.0 * eps * st.R / (c_const * k)
+        else:
+            thr_new = 2.0 * st.R
+        opens = is_first | is_second | (is_general & (dmin > thr_new))
+        handles = is_general & ~(dmin > thr_new)
+
+        st = _cond_once(
+            opens, lambda s: _open_center_masked(s, x, xc, xsrc, opens), st
+        )
+        st, added = _handle_masked(
+            spec, k, caps_arr, st, z, x, xc, xsrc, handles
+        )
+
+        # first/second bookkeeping: anchor + initial estimate
+        r0 = jnp.sqrt(jnp.maximum(jnp.sum((x - st.x1) ** 2), 0.0))
+        R2 = r0 if variant == "diameter" else r0 / 2.0
+        st = st._replace(
+            R=jnp.where(is_second, jnp.maximum(R2, 1e-30), st.R),
+            x1=jnp.where(is_first, x, st.x1),
+        )
+
+        if variant == "diameter":
+            d1 = jnp.sqrt(jnp.maximum(jnp.sum((x - st.x1) ** 2), 0.0))
+            trigger = is_general & (d1 > 2.0 * st.R)
+
+            def upd(st):
+                st = st._replace(R=d1)
+                return restructure_diameter(st)
+
+            st = _cond_once(trigger, upd, st)
+            changed = opens | added | trigger
+        else:
+            need = is_general & (
+                jnp.sum(st.cvalid.astype(jnp.int32)) > tau
+            )
+            st = _cond_once(need, restructure_radius, st)
+            # an over-tau center count only ever follows an open this step,
+            # so `opens` subsumes `need` in the changed bit
+            changed = opens | added
+        # `changed` is the precheck-staleness bit: True iff any field the
+        # block precheck reads (centers/cvalid/dv/dc/R/x1) may have been
+        # written. n_seen/overflow always advance but are not precheck
+        # inputs.
+        return st._replace(n_seen=t + v.astype(jnp.int32)), changed
+
+    return step
+
+
+def _make_step_reference(spec: MatroidSpec, k: int, tau: int, caps_arr,
+                         variant: str, eps: float, c_const: int):
+    """The historical cond-ladder per-point Alg.-2 scan step (the bit-exact
+    reference semantics the branchless step is defined by)."""
+
+    def open_center(st: StreamState, x, xc, xsrc) -> StreamState:
+        slot = jnp.argmin(st.cvalid)
+        return st._replace(
+            centers=st.centers.at[slot].set(x),
+            cvalid=st.cvalid.at[slot].set(True),
+            dp=st.dp.at[slot, 0].set(x),
+            dc=st.dc.at[slot, 0].set(xc),
+            dv=st.dv.at[slot, 0].set(True),
+            ds=st.ds.at[slot, 0].set(xsrc),
+        )
+
+    def restructure_radius(st: StreamState) -> StreamState:
+        """tau-variant: while #centers > tau: R *= 2; filter; merge."""
+
+        def cond(st):
+            return jnp.sum(st.cvalid.astype(jnp.int32)) > tau
+
+        def body(st):
+            R = st.R * 2.0
+            st = st._replace(R=R)
+            keep = _filter_centers(st, R)
+            dead = st.cvalid & ~keep
+            st = st._replace(cvalid=keep)
+            return _merge_delegates_ref(spec, k, caps_arr, st, dead)
+
+        return jax.lax.while_loop(cond, body, st)
+
+    def restructure_diameter(st: StreamState) -> StreamState:
+        """Alg. 2: after R update, filter at eps*R/(ck) and merge."""
+        thr = jnp.float32(eps) * st.R / (c_const * k)
+        keep = _filter_centers(st, thr)
+        dead = st.cvalid & ~keep
+        st = st._replace(cvalid=keep)
+        return _merge_delegates_ref(spec, k, caps_arr, st, dead)
 
     def step(st: StreamState, inp):
         x, xc, xsrc, v = inp
@@ -324,7 +598,7 @@ def _make_step(spec: MatroidSpec, k: int, tau: int, caps_arr, variant: str,
                 return open_center(st, x, xc, xsrc)
 
             def as_handle(st):
-                return _handle(spec, k, caps_arr, st, z, x, xc, xsrc)
+                return _handle_ref(spec, k, caps_arr, st, z, x, xc, xsrc)
 
             st = jax.lax.cond(dmin > thr_new, as_new, as_handle, st)
 
@@ -352,9 +626,28 @@ def _make_step(spec: MatroidSpec, k: int, tau: int, caps_arr, variant: str,
             skip,
             st,
         )
-        return st, None
+        # conservative staleness bit: the reference impl always reports
+        # "maybe changed", so the blocked scan re-prechecks every iteration
+        # (the historical behavior)
+        return st, jnp.bool_(True)
 
     return step
+
+
+def _make_step(spec: MatroidSpec, k: int, tau: int, caps_arr, variant: str,
+               eps: float, c_const: int, step_impl: str = "branchless"):
+    """Build the per-point Alg.-2 scan step (``branchless`` masked-update
+    default, or the historical ``reference`` cond ladder)."""
+    if step_impl not in STEP_IMPLS:
+        raise ValueError(
+            f"step_impl must be one of {STEP_IMPLS}, got {step_impl!r}"
+        )
+    make = (
+        _make_step_branchless
+        if step_impl == "branchless"
+        else _make_step_reference
+    )
+    return make(spec, k, tau, caps_arr, variant, eps, c_const)
 
 
 def _block_precheck(spec: MatroidSpec, k: int, caps_arr, variant: str,
@@ -371,60 +664,99 @@ def _block_precheck(spec: MatroidSpec, k: int, caps_arr, variant: str,
     boundaries. Inactive valid points are exact no-ops whose only effect is
     ``n_seen += 1`` and ``overflow += forced`` — the invariant the blocked
     scan's bulk-skip relies on (state-unchanged induction along the block).
+
+    The distance + top-3-nearest classification is one fused op
+    (``kernels.ops.center_precheck``: Pallas panel-matmul kernel on TPU,
+    matmul-form jnp on CPU, the exact broadcast oracle under ``ref``), and
+    the two candidate centers it returns are *exact-refined* here: a
+    (B, 2, d) gather recomputes their distances with the per-point
+    arithmetic, so the nearest-center choice and the open threshold are
+    decided exactly and only two cases still fall back to the sequential
+    replay — an exact tie between the two candidates (``jnp.argmin``'s
+    first-index rule needs the full buffer order) and a third candidate
+    within the matmul error margin of the refined minimum (the candidate
+    pair might then not contain the true nearest).
     """
     from ..kernels import ops as _ops
 
-    dists, margin = _ops.block_center_dists(xb, st.centers, st.cvalid)
-    tcap = st.centers.shape[0]
-    dmin = jnp.min(dists, axis=1)
-    z = jnp.argmin(dists, axis=1)
-    # near-tie in the nearest-center choice => the precheck's z may disagree
-    # with the exact path's; send those to the sequential fallback.
-    second = jnp.min(
-        jnp.where(jax.nn.one_hot(z, tcap, dtype=bool), _BIG, dists), axis=1
+    dmin_e, z1, _second_e, z2, third_e, margin = _ops.center_precheck(
+        xb, st.centers, st.cvalid
     )
-    tie = (second - dmin) <= 2.0 * margin
+    d1e = jnp.sqrt(
+        jnp.maximum(jnp.sum((st.centers[z1] - xb) ** 2, axis=-1), 0.0)
+    )
+    d2e = jnp.sqrt(
+        jnp.maximum(jnp.sum((st.centers[z2] - xb) ** 2, axis=-1), 0.0)
+    )
+    d1e = jnp.where(st.cvalid[z1], d1e, _BIG)
+    d2e = jnp.where(st.cvalid[z2], d2e, _BIG)
+    z = jnp.where(d2e < d1e, z2, z1)
+    dmin = jnp.minimum(d1e, d2e)
+    # sequential-fallback cases: exact candidate tie, or the third-nearest
+    # estimate within the error margin of the estimated minimum
+    tie = (d1e == d2e) | ((third_e - dmin_e) <= 2.0 * margin)
 
     if variant == "diameter":
         thr_new = 2.0 * eps * st.R / (c_const * k)
     else:
         thr_new = 2.0 * st.R
-    opens = dmin > thr_new - margin
+    opens = dmin > thr_new
 
-    dvz = st.dv[z]  # (B, SLOT)
-    cnt = jnp.sum(dvz.astype(jnp.int32), axis=1)
-    has_room = ~jnp.all(dvz, axis=1)
+    # HANDLE classification via per-center count tables: O(T * SLOT) once
+    # per block + O(B) scalar gathers, instead of gathering every row's
+    # (SLOT[, gamma]) delegate buffers. Counts are integers, so the add
+    # decisions are exactly the per-row sums the scan step computes.
+    cnt_t = jnp.sum(st.dv.astype(jnp.int32), axis=1)  # (T,)
+    full_t = jnp.all(st.dv, axis=1)  # (T,)
+    cnt = cnt_t[z]
+    has_room = ~full_t[z]
+    # Rows whose labels fall outside the table range cannot be classified
+    # by the count tables (a gather would clamp/wrap where the per-point
+    # step compares `dc == c` exactly) — flag them active so the exact
+    # replay decides, preserving bit-identity for arbitrary label input.
     if spec.kind == "uniform":
         add = cnt < k
         forced = jnp.zeros(xb.shape[0], jnp.int32)
+        oob = jnp.zeros(xb.shape[0], bool)
     elif spec.kind == "partition":
         c = xcb[:, 0]
-        same = dvz & (st.dc[z][:, :, 0] == c[:, None])
-        add = (cnt < k) & (
-            jnp.sum(same.astype(jnp.int32), axis=1) < caps_arr[c]
-        )
+        h = max(spec.num_categories, 1)
+        oob = (c < 0) | (c >= h)
+        same_t = jnp.sum(
+            (
+                (st.dc[:, :, 0, None] == jnp.arange(h)[None, None, :])
+                & st.dv[:, :, None]
+            ).astype(jnp.int32),
+            axis=1,
+        )  # (T, h): delegates of center t in category c
+        cs = jnp.clip(c, 0, h - 1)
+        add = (cnt < k) & (same_t[z, cs] < caps_arr[cs])
         forced = jnp.zeros(xb.shape[0], jnp.int32)
     elif spec.kind == "transversal":
-        dcz = st.dc[z]  # (B, SLOT, gamma)
-        match = (dcz[:, :, :, None] == xcb[:, None, None, :]) & (
-            xcb[:, None, None, :] >= 0
-        )  # (B, SLOT, gamma, gamma_x)
-        holds = jnp.any(match, axis=2) & dvz[:, :, None]  # (B, SLOT, gamma_x)
-        cnts = jnp.sum(holds.astype(jnp.int32), axis=1)  # (B, gamma_x)
+        h = max(spec.num_categories, 1)
+        oob = jnp.any(xcb >= h, axis=1)  # -1 padding is masked below
+        holds_t = jnp.any(
+            st.dc[:, :, :, None] == jnp.arange(h)[None, None, None, :],
+            axis=2,
+        ) & st.dv[:, :, None]  # (T, SLOT, h): slot holds category
+        cnt_th = jnp.sum(holds_t.astype(jnp.int32), axis=1)  # (T, h)
+        cnts = cnt_th[z[:, None], jnp.clip(xcb, 0, h - 1)]  # (B, gamma_x)
         short = (cnts < k) & (xcb >= 0)
         want = jnp.any(short, axis=1)
         add = want & has_room
-        forced = (want & ~has_room).astype(jnp.int32)
+        forced = (want & ~has_room & ~oob).astype(jnp.int32)
     else:  # pragma: no cover
         raise ValueError(f"blocked scan not defined for {spec.kind!r}")
     add = add & has_room
 
-    active = opens | add | tie
+    active = opens | add | tie | oob
     if variant == "diameter":
+        # d1 is the per-point arithmetic itself (row-wise diff/square/sum),
+        # so the R-update trigger is decided exactly — no margin needed
         d1 = jnp.sqrt(
             jnp.maximum(jnp.sum((xb - st.x1[None, :]) ** 2, axis=-1), 0.0)
         )
-        active = active | (d1 > 2.0 * st.R - margin)
+        active = active | (d1 > 2.0 * st.R)
     return active & vb, forced
 
 
@@ -455,20 +787,45 @@ def _blocked_scan(step, spec: MatroidSpec, k: int, caps_arr, variant: str,
     def block_step(st: StreamState, inp):
         xb, xcb, srcb, vb = inp
 
+        # one precheck against the block-entry state decides the whole
+        # block when nothing is active (the steady-state case): the loop
+        # below — whose batched-while carry select would copy every state
+        # buffer per iteration under vmap — is entered only when some
+        # point actually needs a sequential replay
+        active0, forced0 = _block_precheck(
+            spec, k, caps_arr, variant, eps, c_const, st, xb, xcb, vb
+        )
+        excl0 = jnp.cumsum(vb.astype(jnp.int32)) - vb.astype(jnp.int32)
+        any_act = jnp.any(active0 | (vb & (st.n_seen + excl0 < 2)))
+        nv = jnp.sum(vb.astype(jnp.int32))
+        fo = jnp.sum(jnp.where(vb, forced0, 0))
+        st = st._replace(
+            n_seen=st.n_seen + jnp.where(any_act, 0, nv),
+            overflow=st.overflow + jnp.where(any_act, 0, fo),
+        )
+
         def cond(carry):
             return carry[1] < B
 
         def body(carry):
-            st, i = carry
-            active, forced = _block_precheck(
-                spec, k, caps_arr, variant, eps, c_const, st, xb, xcb, vb
-            )
+            st, i, active, forced, dirty = carry
+
+            # the precheck is a pure function of (centers, cvalid, dv, dc,
+            # R, x1); replaying a point that changed none of them (a
+            # margin-fallback no-op) leaves the cached classification
+            # bit-identical, so only `dirty` iterations recompute it
+            def recompute(_):
+                return _block_precheck(
+                    spec, k, caps_arr, variant, eps, c_const, st, xb, xcb,
+                    vb,
+                )
+
+            active, forced = _cond_once(dirty, recompute, (active, forced))
             rem = idx >= i
             # the first two (valid) stream points take special branches
             vrem = vb & rem
             excl = jnp.cumsum(vrem.astype(jnp.int32)) - vrem.astype(jnp.int32)
-            active = active | (vrem & (st.n_seen + excl < 2))
-            act = active & rem
+            act = (active | (vrem & (st.n_seen + excl < 2))) & rem
             f = jnp.where(jnp.any(act), jnp.argmax(act), B).astype(jnp.int32)
             skip = vrem & (idx < f)
             st = st._replace(
@@ -477,13 +834,29 @@ def _blocked_scan(step, spec: MatroidSpec, k: int, caps_arr, variant: str,
             )
             fs = jnp.minimum(f, B - 1)  # clamped gather; guarded by f < B
 
-            def do_point(st: StreamState) -> StreamState:
-                return step(st, (xb[fs], xcb[fs], srcb[fs], vb[fs]))[0]
+            def do_point(carry):
+                st, _ = carry
+                return step(st, (xb[fs], xcb[fs], srcb[fs], vb[fs]))
 
-            st = jax.lax.cond(f < B, do_point, lambda s: s, st)
-            return st, f + 1
+            # _cond_once, not lax.cond: under vmap a cond pays the replay
+            # step on every block iteration of every shard; the single-trip
+            # while skips it for real whenever no lane found an active point
+            st, changed = _cond_once(
+                f < B, do_point, (st, jnp.bool_(False))
+            )
+            return st, f + 1, active, forced, changed
 
-        st, _ = jax.lax.while_loop(cond, body, (st, jnp.int32(0)))
+        def run_block(st: StreamState) -> StreamState:
+            # seeded with the hoisted precheck (dirty=False: the state has
+            # not changed since it was computed)
+            st, _, _, _, _ = jax.lax.while_loop(
+                cond,
+                body,
+                (st, jnp.int32(0), active0, forced0, jnp.bool_(False)),
+            )
+            return st
+
+        st = _cond_once(any_act, run_block, st)
         return st, None
 
     st, _ = jax.lax.scan(block_step, st0, (Pb, Cb, Sb, Vb))
@@ -493,11 +866,15 @@ def _blocked_scan(step, spec: MatroidSpec, k: int, caps_arr, variant: str,
 def _ingest_core(st0: StreamState, points, cats, valid, src,
                  spec: MatroidSpec, caps_arr, k: int, tau: int,
                  variant: str, eps: float, c_const: int,
-                 block_size: int) -> StreamState:
-    step = _make_step(spec, k, tau, caps_arr, variant, eps, c_const)
+                 block_size: int, step_impl: str) -> StreamState:
+    step = _make_step(spec, k, tau, caps_arr, variant, eps, c_const,
+                      step_impl)
     valid = valid.astype(bool)
     if block_size <= 1:
-        st, _ = jax.lax.scan(step, st0, (points, cats, src, valid))
+        st, _ = jax.lax.scan(
+            lambda s, inp: (step(s, inp)[0], None),
+            st0, (points, cats, src, valid),
+        )
         return st
     return _blocked_scan(
         step, spec, k, caps_arr, variant, eps, c_const,
@@ -505,28 +882,56 @@ def _ingest_core(st0: StreamState, points, cats, valid, src,
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("spec", "k", "tau", "variant", "c_const", "block_size"),
-)
-def ingest_batch(
+def _ingest_batch_impl(
     st0: StreamState,
-    points: jnp.ndarray,  # (n, d) metric-normalized stream order
-    cats: jnp.ndarray,  # (n, gamma)
-    valid: jnp.ndarray,  # (n,)
+    points: jnp.ndarray,
+    cats: jnp.ndarray,
+    valid: jnp.ndarray,
     spec: MatroidSpec,
     caps: Optional[jnp.ndarray],
     k: int,
     tau: int,
     *,
-    base_index: jnp.ndarray = 0,  # global stream offset of points[0]
-    variant: str = "radius",  # "radius" (§5.2 tau-controlled) | "diameter" (Alg. 2)
+    base_index: jnp.ndarray = 0,
+    variant: str = "radius",
     eps: float = 0.5,
     c_const: int = 32,
     block_size: int = 128,
-    src: Optional[jnp.ndarray] = None,  # explicit global indices (overrides
-                                        # base_index + arange; compose path)
+    step_impl: str = "branchless",
+    src: Optional[jnp.ndarray] = None,
 ) -> StreamState:
+    n, _ = points.shape
+    caps_arr = caps if caps is not None else jnp.zeros((1,), jnp.int32)
+    if src is None:
+        src = jnp.asarray(base_index, jnp.int32) + jnp.arange(
+            n, dtype=jnp.int32
+        )
+    else:
+        src = jnp.asarray(src, jnp.int32)
+    return _ingest_core(
+        st0, points, cats, valid, src, spec, caps_arr, k, tau,
+        variant, eps, c_const, block_size, step_impl,
+    )
+
+
+_INGEST_STATICS = (
+    "spec", "k", "tau", "variant", "c_const", "block_size", "step_impl"
+)
+
+ingest_batch = functools.partial(
+    jax.jit, static_argnames=_INGEST_STATICS
+)(_ingest_batch_impl)
+
+# donated variant for resume-in-place callers (state reassigned every call,
+# e.g. the serving layer): XLA aliases the old state's buffers into the new
+# state's, so a steady-state ingest stops paying a full state copy per call
+# — the dominant fixed cost once the scan itself is branchless. The donated
+# input is consumed: only use when the passed state is dropped on return.
+ingest_batch_donated = functools.partial(
+    jax.jit, static_argnames=_INGEST_STATICS, donate_argnums=(0,)
+)(_ingest_batch_impl)
+
+ingest_batch.__doc__ = _ingest_batch_impl.__doc__ = (
     """Resume the jit'd Alg.-2 scan over one batch of the stream.
 
     ``st0`` is ``init_stream_state(...)`` or the state returned by a previous
@@ -539,20 +944,12 @@ def ingest_batch(
     vectorized precheck bulk-skips no-op points and replays only state-
     changing ones through the per-point step) — bit-identical to
     ``block_size=1`` by construction; the equivalence tests parameterize
-    over both.
+    over both. ``step_impl`` selects the branchless masked-update step
+    (default) or the historical cond-ladder reference, themselves
+    bit-identical (tests/test_branchless_scan.py). ``ingest_batch_donated``
+    is the same function with the input state donated (serving hot path).
     """
-    n, _ = points.shape
-    caps_arr = caps if caps is not None else jnp.zeros((1,), jnp.int32)
-    if src is None:
-        src = jnp.asarray(base_index, jnp.int32) + jnp.arange(
-            n, dtype=jnp.int32
-        )
-    else:
-        src = jnp.asarray(src, jnp.int32)
-    return _ingest_core(
-        st0, points, cats, valid, src, spec, caps_arr, k, tau,
-        variant, eps, c_const, block_size,
-    )
+)
 
 
 def init_sharded_states(
@@ -573,11 +970,7 @@ def init_sharded_states(
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("spec", "k", "tau", "variant", "c_const", "block_size"),
-)
-def ingest_batch_sharded(
+def _ingest_batch_sharded_impl(
     sts: StreamState,  # stacked: every leaf has leading shard axis S
     points: jnp.ndarray,  # (S, m, d)
     cats: jnp.ndarray,  # (S, m, gamma)
@@ -592,20 +985,161 @@ def ingest_batch_sharded(
     eps: float = 0.5,
     c_const: int = 32,
     block_size: int = 128,
+    step_impl: str = "branchless",
 ) -> StreamState:
-    """vmapped blocked ingestion: every shard runs its own independent
-    Alg.-2 scan (paper §3 / the MapReduce formulation: coresets of a
-    partition compose by union). Per-shard results are bit-identical to
-    running ``ingest_batch`` on that shard's sub-stream alone."""
     caps_arr = caps if caps is not None else jnp.zeros((1,), jnp.int32)
 
     def one(st, p, c, v, s):
         return _ingest_core(
             st, p, c, v, s, spec, caps_arr, k, tau,
-            variant, eps, c_const, block_size,
+            variant, eps, c_const, block_size, step_impl,
         )
 
     return jax.vmap(one)(sts, points, cats, valid.astype(bool), src)
+
+
+ingest_batch_sharded = functools.partial(
+    jax.jit, static_argnames=_INGEST_STATICS
+)(_ingest_batch_sharded_impl)
+
+# donated variant (see ingest_batch_donated): a stacked shard state is S
+# full StreamStates, so the per-call output copy it avoids is S times larger
+ingest_batch_sharded_donated = functools.partial(
+    jax.jit, static_argnames=_INGEST_STATICS, donate_argnums=(0,)
+)(_ingest_batch_sharded_impl)
+
+ingest_batch_sharded.__doc__ = _ingest_batch_sharded_impl.__doc__ = (
+    """vmapped blocked ingestion: every shard runs its own independent
+    Alg.-2 scan (paper §3 / the MapReduce formulation: coresets of a
+    partition compose by union). Per-shard results are bit-identical to
+    running ``ingest_batch`` on that shard's sub-stream alone.
+
+    This is the single-device drive; the branchless step is what makes it
+    fast (a vmapped cond ladder pays select-both-branches on every step).
+    With more than one device, ``ingest_batch_sharded_mapped`` runs the
+    shard groups as per-device programs instead.
+    """
+)
+
+
+PLACEMENTS = ("auto", "vmap", "shard_map", "pipeline")
+
+
+def resolve_placement(placement: str, num_shards: int) -> str:
+    """Resolve the sharded-ingest drive.
+
+    ``vmap``       one batched program over row-granular round-robin shard
+                   sub-streams (single-accelerator drive: one launch covers
+                   all shards; the branchless step is what makes it cheap);
+    ``shard_map``  per-device shard groups over a 1-D mesh (multi-device
+                   accelerator drive: real branches, real parallelism, one
+                   SPMD launch);
+    ``pipeline``   batch-granular round-robin over independent per-shard
+                   states pinned across devices — each ingest is the plain
+                   blocked scan (identical executable to the unsharded
+                   path, so sharding costs nothing on a host CPU), and
+                   consecutive batches hit different states/devices so
+                   async dispatch can overlap them.
+
+    ``auto``: CPU backend -> ``pipeline`` (a host pays shard_map's
+    per-call SPMD launch without an accelerator's gain, and vmap's lane
+    overhead without its launch amortization); otherwise ``shard_map``
+    when more than one device can take a whole shard, else ``vmap``.
+    """
+    if placement not in PLACEMENTS:
+        raise ValueError(
+            f"placement must be one of {PLACEMENTS}, got {placement!r}"
+        )
+    if placement != "auto":
+        return placement
+    if num_shards <= 1:
+        return "vmap"
+    if jax.default_backend() == "cpu":
+        return "pipeline"
+    return (
+        "shard_map" if mesh_device_count(num_shards) > 1 else "vmap"
+    )
+
+
+def mesh_device_count(num_shards: int, n_devices: Optional[int] = None) -> int:
+    """Largest device count <= n_devices that divides ``num_shards`` (each
+    device must own an equal, whole number of shard states)."""
+    if n_devices is None:
+        n_devices = jax.device_count()
+    nd = max(1, min(int(n_devices), int(num_shards)))
+    while num_shards % nd:
+        nd -= 1
+    return nd
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_mapped_fn(nd: int, spec: MatroidSpec, k: int, tau: int,
+                       variant: str, eps: float, c_const: int,
+                       block_size: int, step_impl: str, donate: bool):
+    """jit(shard_map(vmap(scan))) over a 1-D ``shards`` mesh of nd devices,
+    cached per (mesh size, scan statics). Device list is process-stable, so
+    caching on nd alone is sound."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..compat import shard_map as _shard_map
+    from ..launch.mesh import make_mesh
+
+    mesh = make_mesh((nd,), ("shards",), devices=jax.devices()[:nd])
+    psh = P("shards")
+
+    def local(sts, p, c, v, s, caps_arr):
+        def one(st, p1, c1, v1, s1):
+            return _ingest_core(
+                st, p1, c1, v1, s1, spec, caps_arr, k, tau,
+                variant, eps, c_const, block_size, step_impl,
+            )
+
+        return jax.vmap(one)(sts, p, c, v, s)
+
+    mapped = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(psh, psh, psh, psh, psh, P()),
+        out_specs=psh,
+    )
+    return jax.jit(mapped, donate_argnums=(0,) if donate else ())
+
+
+def ingest_batch_sharded_mapped(
+    sts: StreamState,  # stacked: every leaf has leading shard axis S
+    points: jnp.ndarray,  # (S, m, d)
+    cats: jnp.ndarray,  # (S, m, gamma)
+    valid: jnp.ndarray,  # (S, m)
+    src: jnp.ndarray,  # (S, m) global stream indices
+    spec: MatroidSpec,
+    caps: Optional[jnp.ndarray],
+    k: int,
+    tau: int,
+    *,
+    variant: str = "radius",
+    eps: float = 0.5,
+    c_const: int = 32,
+    block_size: int = 128,
+    step_impl: str = "branchless",
+    donate: bool = False,
+) -> StreamState:
+    """``shard_map`` drive of sharded ingestion: the S shard states are
+    partitioned across a 1-D mesh of min(devices, S) devices (largest count
+    dividing S) and each device runs its local shard group as an ordinary
+    program — real branches, no select-both-branches tax, true multi-device
+    parallelism. Per-shard results are bit-identical to
+    ``ingest_batch_sharded`` (it is the same ``_ingest_core`` under a
+    different drive); on a single device this degenerates to the vmap path
+    plus shard_map dispatch overhead. ``donate=True`` consumes ``sts``
+    (serving hot path: the caller reassigns its state every call)."""
+    S = points.shape[0]
+    caps_arr = caps if caps is not None else jnp.zeros((1,), jnp.int32)
+    nd = mesh_device_count(S)
+    fn = _sharded_mapped_fn(
+        nd, spec, k, tau, variant, float(eps), int(c_const),
+        int(block_size), step_impl, bool(donate),
+    )
+    return fn(sts, points, cats, valid.astype(bool), src, caps_arr)
 
 
 def stream_coreset(
@@ -622,6 +1156,7 @@ def stream_coreset(
     eps: float = 0.5,
     c_const: int = 32,
     block_size: int = 1,
+    step_impl: str = "branchless",
 ) -> tuple[Coreset, StreamState]:
     """One-pass streaming coreset: init + single ingest_batch + snapshot.
 
@@ -635,6 +1170,7 @@ def stream_coreset(
     st = ingest_batch(
         st0, points, cats, valid, spec, caps, k, tau,
         variant=variant, eps=eps, c_const=c_const, block_size=block_size,
+        step_impl=step_impl,
     )
     return snapshot_coreset(st), st
 

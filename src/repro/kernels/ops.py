@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from . import flash as _flash
 from . import gmm_step as _gmm_step
 from . import pdist as _pdist
+from . import precheck as _precheck
 from . import ref as _ref
 from . import ssd as _ssd
 
@@ -26,6 +27,11 @@ _FORCE = os.environ.get("REPRO_KERNEL_BACKEND", "")  # "", "pallas", "ref", "int
 
 def _mode(force: Optional[str]) -> str:
     f = force or _FORCE
+    if f == "matmul":
+        # only center_precheck has a distinct matmul-form path (it handles
+        # the knob before reaching here); for every other op the jnp
+        # reference IS the matmul-free/CPU path
+        return "ref"
     if f:
         return f
     return "pallas" if jax.default_backend() == "tpu" else "ref"
@@ -42,40 +48,67 @@ def pairwise_dist(x, y, *, force: Optional[str] = None):
     return jnp.sqrt(pairwise_sqdist(x, y, force=force))
 
 
-_F32_MAX = jnp.float32(jnp.finfo(jnp.float32).max)
+def _pdist_e2(block, centers, cvalid, *, per_row: bool = False):
+    """Squared-space error bound of the matmul-form ||x||^2+||y||^2-2x.y
+    distances: cancellation loses ~eps * (||x||^2+||y||^2); bound it by the
+    operand norms in play — per block-row when ``per_row`` (each point's
+    own norm against the largest center norm: tighter, so fewer borderline
+    points hit the exact fallback), the block-global max otherwise."""
+    xnorm = jnp.sum(block * block, axis=-1)
+    if not per_row:
+        xnorm = jnp.max(xnorm)
+    scale = xnorm + jnp.max(
+        jnp.where(cvalid, jnp.sum(centers * centers, axis=-1), 0.0)
+    )
+    return jnp.float32(1e-5) * jnp.maximum(scale, 1e-12)
 
 
-def block_center_dists(block, centers, cvalid, *, force: Optional[str] = None):
-    """Fused block-of-points x center-buffer distances for the blocked scan.
+def center_precheck(block, centers, cvalid, *, force: Optional[str] = None):
+    """Fused blocked-scan precheck: distance-to-centers + top-3 nearest
+    classification in one op.
 
-    (B, d), (T, d), (T,) -> ((B, T) Euclidean distances with invalid centers
-    masked to float32 max, scalar error margin).
+    (B, d), (T, d), (T,) -> (dmin (B,), z (B,) int32, second (B,),
+    z2 (B,) int32, third (B,), error margin — (B,) per-row, or scalar 0 on
+    the exact path). ``dmin``/``second``/``third`` are Euclidean distances
+    to the nearest/second/third *valid* centers (float32 max when masked),
+    ``z``/``z2`` the two nearest indices with ``jnp.argmin`` tie-breaking.
+    The caller exact-refines the two candidate centers (a (B, 2, d) gather
+    is cheap; the (B, T, d) pass is not) and uses ``third`` + margin to
+    decide whether the candidate pair certainly contains the true nearest.
 
-    The ref path reproduces ``core.streaming._dists_to_centers`` bit for bit
-    (broadcast diff / square / sum / sqrt, so the blocked scan's precheck is
-    *exactly* the per-point arithmetic) and reports margin 0. The Pallas path
-    routes through the matmul-form pdist kernel, whose cancellation error is
-    bounded by the returned margin — callers must treat any comparison that
-    lands within the margin as undecided and fall back to the exact path.
+    Four paths: ``ref`` (exact broadcast arithmetic, margin 0 — the bit
+    oracle), ``matmul`` (jnp matmul-form, the non-TPU default: the blocked
+    scan's hot loop shouldn't materialize a (B, T, d) diff tensor per
+    iteration), and ``pallas``/``interpret`` (the fused Pallas kernel,
+    panel matmul + in-register top-3 reduction so the (B, T) matrix never
+    leaves VMEM). All matmul-form paths report the cancellation margin;
+    the scan replays anything within it through the exact per-point step,
+    so every path yields bit-identical scan states.
     """
-    m = _mode(force)
+    f = force or _FORCE
+    m = f if f else ("pallas" if jax.default_backend() == "tpu" else "matmul")
     if m == "ref":
-        diff = centers[None, :, :] - block[:, None, :]
-        d2 = jnp.sum(diff * diff, axis=-1)
-        d = jnp.sqrt(jnp.maximum(d2, 0.0))
-        margin = jnp.float32(0.0)
+        dmin, z, second, z2, third = _ref.center_precheck(
+            block, centers, cvalid
+        )
+        return dmin, z, second, z2, third, jnp.float32(0.0)
+    if m == "matmul":
+        dmin, z, second, z2, third = _ref.center_precheck_matmul(
+            block, centers, cvalid
+        )
     else:
-        d2 = _pdist.pairwise_sqdist(
-            block, centers, interpret=(m == "interpret")
+        dmin, z, second, z2, third = _precheck.center_precheck_stats(
+            block, centers, cvalid, interpret=(m == "interpret")
         )
-        d = jnp.sqrt(d2)
-        # matmul-form ||x||^2+||y||^2-2x.y loses ~eps * (||x||^2+||y||^2)
-        # to cancellation; bound it by the largest operand norms in play.
-        scale = jnp.max(jnp.sum(block * block, axis=-1)) + jnp.max(
-            jnp.where(cvalid, jnp.sum(centers * centers, axis=-1), 0.0)
-        )
-        margin = jnp.sqrt(jnp.float32(1e-5) * jnp.maximum(scale, 1e-12))
-    return jnp.where(cvalid[None, :], d, _F32_MAX), margin
+    # distance-space error bound from the squared-space cancellation bound
+    # e2: |sqrt(a) - sqrt(b)| = |a - b| / (sqrt(a) + sqrt(b)), and every
+    # center the tie test compares sits at d_mm >= dmin — so e2 / dmin
+    # bounds the error, falling back to sqrt(e2) (the d ~ 0 worst case)
+    # when dmin is tiny. ~10-30x tighter than sqrt(e2) alone at real
+    # cluster distances, which is what keeps margin-fallback replays rare.
+    e2 = _pdist_e2(block, centers, cvalid, per_row=True)
+    margin = e2 / jnp.maximum(dmin, jnp.sqrt(e2))
+    return dmin, z, second, z2, third, margin
 
 
 def gmm_update(x, z, min_dist, valid, *, force: Optional[str] = None):

@@ -4,11 +4,20 @@ Serving state is exactly what the paper says to keep (§4.4, §5.2): the
 resumable streaming-scan state (``core.streaming.StreamState``) and the small
 (1-eps)-coreset it induces. Queries never touch the raw stream:
 
-  ingest     resume the jit'd blocked Alg.-2 scan over each arriving batch
-             (``ingest_batch``), with global ``src_idx`` bookkeeping; with
-             ``num_shards > 1`` the batch is dealt round-robin across
-             independent per-shard scan states (one vmapped call,
-             ``ingest_batch_sharded``) whose coresets compose by union (§3);
+  ingest     resume the jit'd branchless blocked Alg.-2 scan over each
+             arriving batch (``ingest_batch_donated`` — the state is
+             reassigned every call, so its buffers are donated and a
+             steady-state batch pays no state copy), with global
+             ``src_idx`` bookkeeping; with ``num_shards > 1`` the stream
+             is partitioned across independent per-shard scan states whose
+             coresets compose by union (§3) under a ``placement`` drive:
+             row-granular round-robin through one vmapped call ("vmap") or
+             a shard_map mesh of per-device shard groups ("shard_map"),
+             or batch-granular round-robin over per-device states
+             ("pipeline" — each ingest is the unsharded executable);
+             ``placement="auto"`` resolves per backend/device count.
+             ``warmup()`` pre-compiles the bucketed scan/solver shapes so
+             first queries stop paying trace+compile;
   cache      the compacted coreset + its pairwise distance matrix live in a
              ``DistanceCache`` keyed by (MatroidSpec, tau, metric) and a
              content fingerprint — ingestion that does not change the
@@ -27,14 +36,19 @@ resumable streaming-scan state (``core.streaming.StreamState``) and the small
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
+from ...core.solvers.jit_sum import bucket_pow2 as _bucket_pow2
+
+import jax
+
 from ...core import geometry
-from ...core.compose import compact_coreset, snapshot_shards
+from ...core.compose import compact_coreset, snapshot_shards, union_coresets
 from ...core.final_solve import SubsetMatroidView
 from ...core.matroid import MatroidSpec, make_host_matroid
 from ...core.solvers import (
@@ -46,9 +60,13 @@ from ...core.solvers import (
 from ...core.streaming import (
     StreamState,
     ingest_batch,
+    ingest_batch_donated,
     ingest_batch_sharded,
+    ingest_batch_sharded_donated,
+    ingest_batch_sharded_mapped,
     init_sharded_states,
     init_stream_state,
+    resolve_placement,
     snapshot_coreset,
 )
 from .cache import CacheKey, CoresetEntry, DistanceCache, coreset_fingerprint
@@ -83,6 +101,7 @@ class DiversityService:
         cache: Optional[DistanceCache] = None,
         num_shards: int = 1,
         block_size: int = 128,
+        placement: str = "auto",
     ):
         if spec.kind == "general" and oracle is None:
             raise ValueError("general matroid service needs a host oracle")
@@ -90,6 +109,10 @@ class DiversityService:
             raise ValueError("partition matroid service needs per-category caps")
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        # resolves "auto" against jax.devices() once, at construction:
+        # shard_map when >1 device can take a whole shard, else the vmap
+        # drive (single-device fallback)
+        self.placement = resolve_placement(placement, num_shards)
         self.spec = spec
         self.k = int(k)
         self.tau = int(tau)
@@ -105,17 +128,34 @@ class DiversityService:
         self.block_size = int(block_size)
         self.cache = cache if cache is not None else DistanceCache()
         self.cache_key = CacheKey(spec=spec, tau=self.tau, metric=str(metric))
-        self._state: Optional[StreamState] = None  # single-shard OR stacked
+        # single-shard state, stacked shard state (vmap/shard_map), or a
+        # list of per-shard states (pipeline)
+        self._state = None
         self._gamma_width = max(spec.gamma, 1)
         self.n_offered = 0
         self._fingerprint: Optional[int] = None
+        self._rr = 0  # pipeline round-robin cursor (batch granularity)
+        # per-shard (valid, src) host pulls for the pipeline fingerprint:
+        # only the shard an ingest touched is re-pulled (entry set to None);
+        # the rest reuse their cached copy, so the per-ingest host-pull
+        # count stays O(1) instead of O(num_shards)
+        self._fp_cache: Optional[list] = None
 
     # ------------------------------------------------------------------
     # ingestion
     # ------------------------------------------------------------------
 
     @property
-    def state(self) -> Optional[StreamState]:
+    def state(self):
+        """The live scan state: a ``StreamState`` (single shard), a
+        stacked one (vmap/shard_map), or a list (pipeline).
+
+        The ingest hot path *donates* this state's buffers to XLA (the
+        steady-state win of not copying the delegate store every batch),
+        so a reference captured here is invalidated by the next
+        ``ingest`` — read or copy (``jax.tree_util.tree_map(jnp.copy,
+        svc.state)``) anything you need to keep before ingesting again.
+        """
         return self._state
 
     def _check_cats(self, n: int, cats: Optional[np.ndarray]) -> np.ndarray:
@@ -142,7 +182,11 @@ class DiversityService:
         return cats_arr
 
     def ingest(
-        self, points: np.ndarray, cats: Optional[np.ndarray] = None
+        self,
+        points: np.ndarray,
+        cats: Optional[np.ndarray] = None,
+        *,
+        pad_to: Optional[int] = None,
     ) -> IngestReport:
         """Feed one batch of the stream (any size) into the scan state.
 
@@ -151,10 +195,14 @@ class DiversityService:
         single blocked scan. Either way batches are padded to a multiple of
         ``block_size`` with invalid rows — a bit-exact no-op for the scan
         that keeps the jit cache keyed on a handful of bucketed shapes
-        instead of recompiling for every ragged final batch.
+        instead of recompiling for every ragged final batch. ``pad_to``
+        raises the padded length further (``warmup`` uses it to compile a
+        target batch shape off an empty batch).
         """
         if self.num_shards > 1:
-            return self.ingest_sharded(points, cats)
+            if self.placement == "pipeline":
+                return self.ingest_pipeline(points, cats, pad_to=pad_to)
+            return self.ingest_sharded(points, cats, pad_to=pad_to)
         t0 = time.perf_counter()
         pts = np.asarray(points, np.float32)
         n, d = pts.shape
@@ -164,7 +212,8 @@ class DiversityService:
                 d, self._gamma_width, self.spec, self.k, self.tau,
                 slot_cap=self.slot_cap,
             )
-        pad = -n % self.block_size
+        total = max(n, pad_to or 0)
+        pad = total + (-total % self.block_size) - n
         if pad:
             pts = np.concatenate([pts, np.zeros((pad, d), np.float32)])
             cats_arr = np.concatenate(
@@ -174,7 +223,11 @@ class DiversityService:
         pts_norm = geometry.normalize_for_metric(
             jnp.asarray(pts, jnp.float32), self.metric
         )
-        self._state = ingest_batch(
+        # donated: the previous state is dropped on reassignment, so XLA
+        # aliases its buffers into the new state instead of copying the
+        # whole delegate store every call (the dominant fixed cost of a
+        # steady-state no-op batch)
+        self._state = ingest_batch_donated(
             self._state,
             pts_norm,
             jnp.asarray(cats_arr),
@@ -193,10 +246,17 @@ class DiversityService:
         return self._report(n, t0)
 
     def ingest_sharded(
-        self, points: np.ndarray, cats: Optional[np.ndarray] = None
+        self,
+        points: np.ndarray,
+        cats: Optional[np.ndarray] = None,
+        *,
+        pad_to: Optional[int] = None,
     ) -> IngestReport:
         """Deal one batch round-robin across ``num_shards`` independent
-        scan states and ingest all shards in one vmapped call.
+        scan states and ingest all shards in one call — the vmap drive on a
+        single device, the ``shard_map``-over-mesh drive when ``placement``
+        resolved to it (per-device shard groups run as real parallel
+        programs).
 
         Each shard sees its own sub-stream; per §3 composability the union
         of the per-shard coresets (``snapshot``) is a coreset of the full
@@ -205,6 +265,17 @@ class DiversityService:
         """
         if self.num_shards < 2:
             raise ValueError("ingest_sharded needs num_shards >= 2")
+        if self.placement == "pipeline":
+            # a pipeline service keeps a *list* of per-shard states; the
+            # stacked-state drives here would corrupt it — route through
+            # ingest()/ingest_pipeline, or construct with placement="vmap"
+            # or "shard_map" for the row-granular deal
+            raise ValueError(
+                "ingest_sharded is the row-granular drive; this service "
+                "resolved placement='pipeline' (batch-granular) — use "
+                "ingest()/ingest_pipeline, or pass placement='vmap' or "
+                "'shard_map'"
+            )
         t0 = time.perf_counter()
         pts = np.asarray(points, np.float32)
         n, d = pts.shape
@@ -223,20 +294,42 @@ class DiversityService:
                     jnp.asarray(pts, jnp.float32), self.metric
                 )
             )
-        mm = -(-n // S)
-        mm += -mm % self.block_size  # bucket the per-shard length too
+        # per-shard sub-batch length, bucketed so ragged batches reuse a
+        # handful of jit shapes; the per-shard block never exceeds it (a
+        # 512-point deal across 8 shards is ONE 64-point block per shard,
+        # not a 64-point block padded to 128)
+        mm0 = -(-max(n, pad_to or 0) // S)
+        sb = min(self.block_size, _bucket_pow2(mm0))
+        mm = mm0 + (-mm0 % sb)
         Pb = np.zeros((S, mm, d), np.float32)
         Cb = np.full((S, mm, self._gamma_width), -1, np.int32)
         Vb = np.zeros((S, mm), bool)
         Sb = np.full((S, mm), -1, np.int32)
-        for s in range(S):
-            rows = np.arange(s, n, S)
-            r = rows.shape[0]
-            Pb[s, :r] = pts_norm[rows]
-            Cb[s, :r] = cats_arr[rows]
-            Vb[s, :r] = True
-            Sb[s, :r] = self.n_offered + rows
-        self._state = ingest_batch_sharded(
+        if n > 0 and n % S == 0:
+            # whole deal in three O(n) reshapes: round-robin row r of the
+            # batch lands at [r % S, r // S]
+            q = n // S
+            Pb[:, :q] = pts_norm.reshape(q, S, d).transpose(1, 0, 2)
+            Cb[:, :q] = cats_arr.reshape(q, S, -1).transpose(1, 0, 2)
+            Vb[:, :q] = True
+            Sb[:, :q] = (
+                self.n_offered
+                + np.arange(n, dtype=np.int64).reshape(q, S).T
+            )
+        else:
+            for s in range(S):
+                rows = np.arange(s, n, S)
+                r = rows.shape[0]
+                Pb[s, :r] = pts_norm[rows]
+                Cb[s, :r] = cats_arr[rows]
+                Vb[s, :r] = True
+                Sb[s, :r] = self.n_offered + rows
+        ingest = (
+            ingest_batch_sharded_donated
+            if self.placement == "vmap"
+            else functools.partial(ingest_batch_sharded_mapped, donate=True)
+        )
+        self._state = ingest(
             self._state,
             jnp.asarray(Pb),
             jnp.asarray(Cb),
@@ -249,10 +342,170 @@ class DiversityService:
             variant=self.stream_variant,
             eps=self.eps,
             c_const=self.c_const,
+            block_size=sb,
+        )
+        self.n_offered += n
+        return self._report(n, t0)
+
+    def _init_pipeline_states(self, d: int) -> None:
+        devs = jax.devices()
+        nd = len(devs)
+        self._state = [
+            jax.device_put(
+                init_stream_state(
+                    d, self._gamma_width, self.spec, self.k, self.tau,
+                    slot_cap=self.slot_cap,
+                ),
+                devs[i % nd],
+            )
+            for i in range(self.num_shards)
+        ]
+
+    def ingest_pipeline(
+        self,
+        points: np.ndarray,
+        cats: Optional[np.ndarray] = None,
+        *,
+        pad_to: Optional[int] = None,
+    ) -> IngestReport:
+        """Route one whole batch to the next shard (batch-granular
+        round-robin) and resume that shard's plain blocked scan.
+
+        The stream partition is by batches instead of rows — still a
+        partition, so §3 union composability is untouched — and each
+        ingest is the *same* jit executable as the unsharded path: per
+        batch, sharding costs nothing. Shard states are pinned round-robin
+        across ``jax.devices()``, so consecutive batches land on different
+        devices and async dispatch can overlap them when the hardware has
+        more than one. Callers that feed a few huge batches (rather than a
+        stream of them) should prefer the row-granular drives, which
+        spread every batch across all shards.
+        """
+        if self.num_shards < 2:
+            raise ValueError("ingest_pipeline needs num_shards >= 2")
+        t0 = time.perf_counter()
+        pts = np.asarray(points, np.float32)
+        n, d = pts.shape
+        cats_arr = self._check_cats(n, cats)
+        if self._state is None:
+            self._init_pipeline_states(d)
+        total = max(n, pad_to or 0)
+        pad = total + (-total % self.block_size) - n
+        if pad:
+            pts = np.concatenate([pts, np.zeros((pad, d), np.float32)])
+            cats_arr = np.concatenate(
+                [cats_arr, np.full((pad, self._gamma_width), -1, np.int32)]
+            )
+        valid = np.arange(n + pad) < n
+        pts_norm = geometry.normalize_for_metric(
+            jnp.asarray(pts, jnp.float32), self.metric
+        )
+        i = self._rr % self.num_shards
+        if n > 0:  # empty (warmup) batches don't consume a shard slot
+            self._rr += 1
+        if self._fp_cache is not None:
+            self._fp_cache[i] = None  # this shard's pull is now stale
+        self._state[i] = ingest_batch_donated(
+            self._state[i],
+            pts_norm,
+            jnp.asarray(cats_arr),
+            jnp.asarray(valid),
+            self.spec,
+            self._caps_j,
+            self.k,
+            self.tau,
+            base_index=jnp.int32(self.n_offered),
+            variant=self.stream_variant,
+            eps=self.eps,
+            c_const=self.c_const,
             block_size=self.block_size,
         )
         self.n_offered += n
         return self._report(n, t0)
+
+    def warmup(
+        self,
+        d: Optional[int] = None,
+        *,
+        ingest_sizes: Sequence[int] = (),
+        ks: Sequence[int] = (),
+        query_batch_sizes: Sequence[int] = (1,),
+        variants: Sequence[str] = ("sum",),
+    ) -> dict:
+        """Ahead-of-time compile of the scan/solver shapes this service
+        will serve, so the first real ingest/query stops paying full
+        trace+compile (~seconds) inside its latency.
+
+        Ingest warmup drives the real jit entry points with an all-invalid
+        batch of each (bucketed) size in ``ingest_sizes`` — a bit-exact
+        no-op for the scan (invalid rows advance nothing), so the stream
+        state is unchanged while the compile cache fills. Requires the
+        point dimension: pass ``d`` before the first ingest, afterwards it
+        is taken from the live state.
+
+        Query warmup answers one discarded batch per (k, batch size,
+        variant) cell through the normal dispatch path, compiling the
+        bucketed batched-solver kernels against the *current* coreset (the
+        distance matrix is content-addressed, so this also builds and
+        caches it). Skipped — with a ``"queries": "skipped (...)"`` note —
+        until something has been ingested, because the solver shapes depend
+        on the coreset size.
+
+        Returns ``{label: seconds}`` per warmed shape.
+        """
+        report: dict = {}
+        if d is None:
+            if self._state is None:
+                raise ValueError(
+                    "warmup() before the first ingest needs the point "
+                    "dimension: warmup(d=...)"
+                )
+            x1 = (
+                self._state[0].x1
+                if isinstance(self._state, list)
+                else self._state.x1
+            )
+            d = int(x1.shape[-1])
+        if self._state is None:
+            if self.num_shards > 1 and self.placement == "pipeline":
+                self._init_pipeline_states(d)
+            elif self.num_shards > 1:
+                self._state = init_sharded_states(
+                    self.num_shards, d, self._gamma_width, self.spec,
+                    self.k, self.tau, slot_cap=self.slot_cap,
+                )
+            else:
+                self._state = init_stream_state(
+                    d, self._gamma_width, self.spec, self.k, self.tau,
+                    slot_cap=self.slot_cap,
+                )
+            # the empty state has an empty coreset: fingerprint it so a
+            # zero-ingest warmup leaves the service in a consistent state
+            self._fingerprint, _ = self._fingerprint_and_size()
+        for size in dict.fromkeys(
+            int(s) for s in (*ingest_sizes, self.block_size)
+        ):
+            t0 = time.perf_counter()
+            # an empty batch padded to `size` invalid rows: same jit cache
+            # key as a real size-`size` ingest, zero state change
+            self.ingest(np.zeros((0, d), np.float32), pad_to=size)
+            report[f"ingest[{size}]"] = time.perf_counter() - t0
+        if self._fingerprint is None or self.snapshot()[0].shape[0] == 0:
+            report["queries"] = "skipped (ingest something first)"
+            return report
+        for variant in variants:
+            for k in dict.fromkeys(int(x) for x in (*ks, self.k)):
+                for bs in query_batch_sizes:
+                    qs = [
+                        DiversityQuery(k=k, variant=variant)
+                        for _ in range(int(bs))
+                    ]
+                    t0 = time.perf_counter()
+                    self.query_batch(qs)
+                    report[f"query[{variant} k={k} b={bs}]"] = (
+                        time.perf_counter() - t0
+                    )
+        return report
 
     def _report(self, n: int, t0: float) -> IngestReport:
         fp, size = self._fingerprint_and_size()
@@ -275,13 +528,30 @@ class DiversityService:
         path. Row order matches ``snapshot``/``snapshot_shards``, and for a
         single shard the value is identical to the old snapshot-based hash.
         """
-        st = self._state
-        dv = np.asarray(st.dv)
-        cv = np.asarray(st.cvalid)
-        ds = np.asarray(st.ds)
-        valid = dv & cv[..., None]
-        src = ds[valid].astype(np.int64)  # row-major == shard-major order
-        return coreset_fingerprint(valid.reshape(-1), src), int(src.shape[0])
+        def pull(st):
+            dv = np.asarray(st.dv)
+            cv = np.asarray(st.cvalid)
+            ds = np.asarray(st.ds)
+            valid = dv & cv[..., None]
+            src = ds[valid].astype(np.int64)
+            return coreset_fingerprint(valid.reshape(-1), src), int(
+                src.shape[0]
+            )
+
+        if isinstance(self._state, list):
+            if self._fp_cache is None:
+                self._fp_cache = [None] * len(self._state)
+            for j, st in enumerate(self._state):
+                if self._fp_cache[j] is None:
+                    self._fp_cache[j] = pull(st)
+            # the union is determined by the shard-major sequence of shard
+            # coresets, so hashing the per-shard hashes is an equivalent
+            # content key
+            return (
+                hash(tuple(fp for fp, _sz in self._fp_cache)),
+                int(sum(sz for _fp, sz in self._fp_cache)),
+            )
+        return pull(self._state)
 
     def snapshot(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Compacted current coreset (points, cats, src_idx), buffer order —
@@ -289,7 +559,11 @@ class DiversityService:
         single shard; the shard-major union (§3) when sharded."""
         if self._state is None:
             raise RuntimeError("ingest at least one batch first")
-        if self.num_shards > 1:
+        if isinstance(self._state, list):  # pipeline: per-shard states
+            cs = union_coresets(
+                [snapshot_coreset(s) for s in self._state]
+            )
+        elif self.num_shards > 1:
             cs = snapshot_shards(self._state)
         else:
             cs = snapshot_coreset(self._state)

@@ -1,0 +1,227 @@
+"""Branchless-scan parity: the masked-update step (``step_impl=
+"branchless"``, the default) is bit-identical to the historical cond-ladder
+Alg.-2 step (``step_impl="reference"``) — same centers, delegates, src_idx,
+R, overflow — across matroid kinds, scan variants, block sizes, batch
+splits, and shard counts, including the transversal add+shrink path and the
+restructure merge.
+
+The reference step IS the PR-2/PR-3 per-point scan, kept verbatim in
+``core.streaming._make_step_reference``; these tests are the contract that
+lets the branchless rewrite (and the fused precheck + exact-refinement
+margin machinery under it) claim "same algorithm, faster under vmap".
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from conftest import make_clustered_points
+from repro.core.matroid import MatroidSpec
+from repro.core.streaming import (
+    ingest_batch,
+    ingest_batch_sharded,
+    ingest_batch_sharded_mapped,
+    init_sharded_states,
+    init_stream_state,
+)
+
+BLOCKS = [1, 16, 64]
+KINDS = ["uniform", "partition", "transversal"]
+VARIANTS = ["radius", "diameter"]
+
+
+def _instance(kind, seed, n):
+    rng = np.random.default_rng(seed)
+    P = make_clustered_points(rng, n=n, d=4, centers=4, spread=0.08)
+    if kind == "uniform":
+        cats = np.zeros((n, 1), np.int32)
+        return P, cats, None, MatroidSpec("uniform"), 3
+    if kind == "partition":
+        h = 3
+        cats = rng.integers(0, h, (n, 1)).astype(np.int32)
+        caps = np.full(h, 2, np.int32)
+        return P, cats, caps, MatroidSpec(
+            "partition", num_categories=h, gamma=1
+        ), 3
+    h, gamma = 3, 2
+    cats = np.full((n, gamma), -1, np.int32)
+    cats[:, 0] = rng.integers(0, h, n)
+    extra = rng.random(n) < 0.5
+    cats[extra, 1] = rng.integers(0, h, extra.sum())
+    # k=2 with dense clusters: delegate adds trigger the greedy-matching
+    # shrink, so the parity covers the transversal shrink path too
+    return P, cats, None, MatroidSpec(
+        "transversal", num_categories=h, gamma=gamma
+    ), 2
+
+
+def _ingest(P, cats, caps, spec, k, tau, *, variant, block_size, step_impl,
+            splits=None):
+    caps_j = None if caps is None else jnp.asarray(caps, jnp.int32)
+    n = P.shape[0]
+    splits = splits or [n]
+    st = init_stream_state(P.shape[1], cats.shape[1], spec, k, tau)
+    off = 0
+    for b in splits:
+        st = ingest_batch(
+            st, jnp.asarray(P[off:off + b]), jnp.asarray(cats[off:off + b]),
+            jnp.ones((b,), bool), spec, caps_j, k, tau, base_index=off,
+            variant=variant, block_size=block_size, step_impl=step_impl,
+        )
+        off += b
+    assert off == n
+    return st
+
+
+def _assert_states_equal(a, b, label):
+    for f in a._fields:
+        assert np.array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        ), f"{label}: field {f} diverged"
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("kind", KINDS)
+def test_branchless_equals_reference(kind, variant):
+    """One-shot ingestion, every block size, both step impls -> one state."""
+    n, tau = 120, 8
+    P, cats, caps, spec, k = _instance(kind, seed=0, n=n)
+    ref = _ingest(P, cats, caps, spec, k, tau, variant=variant,
+                  block_size=1, step_impl="reference")
+    for bs in BLOCKS:
+        st = _ingest(P, cats, caps, spec, k, tau, variant=variant,
+                     block_size=bs, step_impl="branchless")
+        _assert_states_equal(ref, st, f"{kind}/{variant} block={bs}")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_branchless_equals_reference_split_resume(kind):
+    """Ragged batch splits resume mid-block identically under both impls."""
+    n, tau = 120, 8
+    P, cats, caps, spec, k = _instance(kind, seed=1, n=n)
+    ref = _ingest(P, cats, caps, spec, k, tau, variant="radius",
+                  block_size=1, step_impl="reference", splits=[n])
+    st = _ingest(P, cats, caps, spec, k, tau, variant="radius",
+                 block_size=16, step_impl="branchless", splits=[37, 30, 53])
+    _assert_states_equal(ref, st, f"{kind} split resume")
+
+
+@pytest.mark.parametrize("num_shards", [2, 4])
+@pytest.mark.parametrize("kind", KINDS)
+def test_branchless_equals_reference_sharded(kind, num_shards):
+    """The vmapped sharded drive produces bit-identical per-shard states
+    under both step impls (the very case the branchless step exists for:
+    a vmapped cond ladder pays select-both-branches, a vmapped masked
+    update does not — but they must agree bit for bit)."""
+    n, tau, bs = 96, 8, 16
+    P, cats, caps, spec, k = _instance(kind, seed=2, n=n)
+    caps_j = None if caps is None else jnp.asarray(caps, jnp.int32)
+    S = num_shards
+    d, gamma = P.shape[1], cats.shape[1]
+    mm = -(-n // S)
+    Pb = np.zeros((S, mm, d), np.float32)
+    Cb = np.full((S, mm, gamma), -1, np.int32)
+    Vb = np.zeros((S, mm), bool)
+    Sb = np.full((S, mm), -1, np.int32)
+    for s in range(S):
+        rows = np.arange(s, n, S)
+        r = len(rows)
+        Pb[s, :r] = P[rows]
+        Cb[s, :r] = cats[rows]
+        Vb[s, :r] = True
+        Sb[s, :r] = rows
+    args = (jnp.asarray(Pb), jnp.asarray(Cb), jnp.asarray(Vb),
+            jnp.asarray(Sb), spec, caps_j, k, tau)
+    sts0 = init_sharded_states(S, d, gamma, spec, k, tau)
+    a = ingest_batch_sharded(sts0, *args, block_size=bs,
+                             step_impl="branchless")
+    b = ingest_batch_sharded(sts0, *args, block_size=bs,
+                             step_impl="reference")
+    _assert_states_equal(a, b, f"{kind} sharded x{S}")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_shard_map_drive_matches_vmap(kind):
+    """The shard_map-over-mesh drive is the same scan under a different
+    parallel drive: bit-identical stacked states (whatever the local
+    device count — a 1-device mesh degenerates to the vmap path)."""
+    n, tau, bs, S = 96, 8, 16, 4
+    P, cats, caps, spec, k = _instance(kind, seed=3, n=n)
+    caps_j = None if caps is None else jnp.asarray(caps, jnp.int32)
+    d, gamma = P.shape[1], cats.shape[1]
+    mm = -(-n // S)
+    Pb = np.zeros((S, mm, d), np.float32)
+    Cb = np.full((S, mm, gamma), -1, np.int32)
+    Vb = np.zeros((S, mm), bool)
+    Sb = np.full((S, mm), -1, np.int32)
+    for s in range(S):
+        rows = np.arange(s, n, S)
+        r = len(rows)
+        Pb[s, :r] = P[rows]
+        Cb[s, :r] = cats[rows]
+        Vb[s, :r] = True
+        Sb[s, :r] = rows
+    args = (jnp.asarray(Pb), jnp.asarray(Cb), jnp.asarray(Vb),
+            jnp.asarray(Sb), spec, caps_j, k, tau)
+    sts0 = init_sharded_states(S, d, gamma, spec, k, tau)
+    a = ingest_batch_sharded(sts0, *args, block_size=bs)
+    b = ingest_batch_sharded_mapped(sts0, *args, block_size=bs)
+    _assert_states_equal(a, b, f"{kind} shard_map vs vmap")
+
+
+def test_reference_impl_rejects_unknown():
+    P, cats, caps, spec, k = _instance("uniform", seed=4, n=8)
+    with pytest.raises(ValueError, match="step_impl"):
+        _ingest(P, cats, caps, spec, k, 4, variant="radius",
+                block_size=1, step_impl="nope")
+
+
+@pytest.mark.parametrize("kind", ["partition", "transversal"])
+def test_out_of_range_labels_stay_bit_identical(kind):
+    """Labels outside [0, num_categories) — negative or too large — cannot
+    be classified by the precheck's count tables (a gather would clamp
+    where the step compares exactly); they must fall back to the exact
+    replay so blocked == per-point holds for arbitrary label input."""
+    rng = np.random.default_rng(7)
+    n, tau = 90, 8
+    P = make_clustered_points(rng, n=n, d=4, centers=3, spread=0.08)
+    if kind == "partition":
+        cats = rng.integers(0, 3, (n, 1)).astype(np.int32)
+        cats[::7, 0] = -1  # hostile: negative label
+        cats[::11, 0] = 5  # hostile: label >= num_categories
+        caps = np.full(3, 2, np.int32)
+        spec = MatroidSpec("partition", num_categories=3, gamma=1)
+        k = 3
+    else:
+        cats = np.full((n, 2), -1, np.int32)
+        cats[:, 0] = rng.integers(0, 3, n)
+        cats[::7, 1] = 9  # hostile: label >= num_categories
+        caps = None
+        spec = MatroidSpec("transversal", num_categories=3, gamma=2)
+        k = 2
+    ref = _ingest(P, cats, caps, spec, k, tau, variant="radius",
+                  block_size=1, step_impl="reference")
+    for bs in (16, 64):
+        st = _ingest(P, cats, caps, spec, k, tau, variant="radius",
+                     block_size=bs, step_impl="branchless")
+        _assert_states_equal(ref, st, f"{kind} hostile labels block={bs}")
+
+
+def test_diameter_restructure_parity():
+    """A widening stream forces the diameter-variant R update + filter +
+    merge; the branchless _cond_once machinery must match the reference
+    cond exactly through the restructure."""
+    rng = np.random.default_rng(5)
+    n = 100
+    # exponentially growing spread => repeated d1 > 2R triggers
+    P = (rng.normal(size=(n, 3)) * np.geomspace(0.01, 50.0, n)[:, None]
+         ).astype(np.float32)
+    cats = rng.integers(0, 3, (n, 1)).astype(np.int32)
+    caps = np.full(3, 2, np.int32)
+    spec = MatroidSpec("partition", num_categories=3, gamma=1)
+    ref = _ingest(P, cats, caps, spec, 3, 8, variant="diameter",
+                  block_size=1, step_impl="reference")
+    for bs in (1, 16):
+        st = _ingest(P, cats, caps, spec, 3, 8, variant="diameter",
+                     block_size=bs, step_impl="branchless")
+        _assert_states_equal(ref, st, f"diameter restructure block={bs}")

@@ -27,6 +27,55 @@ def test_pdist_kernel(n, m, d, dtype):
                                atol=tol)
 
 
+PRECHECK_SHAPES = [(8, 5, 4), (37, 17, 7), (128, 33, 100), (200, 129, 25)]
+
+
+@pytest.mark.parametrize("B,T,d", PRECHECK_SHAPES)
+@pytest.mark.parametrize("mode", ["matmul", "interpret"])
+def test_center_precheck_modes_vs_exact(B, T, d, mode):
+    """The fused top-3 precheck op: matmul-form jnp (CPU default) and the
+    Pallas kernel (interpret) against the exact broadcast oracle. The
+    indices must agree whenever the gaps exceed the reported margin — the
+    exact contract the blocked scan's exact-refinement fallback relies on."""
+    rng = np.random.default_rng(B * 100 + T)
+    x = jnp.asarray(rng.normal(size=(B, d)) * 3, jnp.float32)
+    c = jnp.asarray(rng.normal(size=(T, d)) * 3, jnp.float32)
+    cv = jnp.asarray(rng.random(T) > 0.2)
+    dmin_r, z_r, sec_r, z2_r, third_r, m_r = ops.center_precheck(
+        x, c, cv, force="ref"
+    )
+    assert float(m_r) == 0.0
+    dmin, z, sec, z2, third, margin = ops.center_precheck(
+        x, c, cv, force=mode
+    )
+    margin = np.broadcast_to(np.asarray(margin), (B,))
+    for a, b in ((dmin_r, dmin), (sec_r, sec), (third_r, third)):
+        a, b = np.asarray(a), np.asarray(b)
+        fin = a < 1e30
+        np.testing.assert_allclose(a[fin], b[fin], rtol=1e-4, atol=1e-4)
+    # candidate indices certain whenever the next-nearest gap clears the
+    # margin (the scan falls back to the exact step otherwise)
+    safe_z = (np.asarray(sec_r) - np.asarray(dmin_r)) > 2 * margin
+    assert np.array_equal(np.asarray(z)[safe_z], np.asarray(z_r)[safe_z])
+    safe_pair = (np.asarray(third_r) - np.asarray(dmin_r)) > 2 * margin
+    pair = np.sort(np.stack([np.asarray(z), np.asarray(z2)]), axis=0)
+    pair_r = np.sort(np.stack([np.asarray(z_r), np.asarray(z2_r)]), axis=0)
+    assert np.array_equal(pair[:, safe_pair], pair_r[:, safe_pair])
+
+
+def test_center_precheck_all_invalid_centers():
+    """No valid centers: every distance is float32 max, indices default to
+    the argmin tie rule (first column) on every path."""
+    x = jnp.asarray(np.ones((4, 3)), jnp.float32)
+    c = jnp.asarray(np.zeros((5, 3)), jnp.float32)
+    cv = jnp.zeros((5,), bool)
+    for mode in ("ref", "matmul", "interpret"):
+        dmin, z, sec, z2, third, _m = ops.center_precheck(x, c, cv,
+                                                          force=mode)
+        assert np.all(np.asarray(dmin) >= np.float32(3.4e38))
+        assert np.array_equal(np.asarray(z), np.zeros(4, np.int32))
+
+
 @pytest.mark.parametrize("n,d", [(16, 4), (100, 25), (1025, 7), (64, 128)])
 def test_gmm_step_kernel(n, d):
     rng = np.random.default_rng(n)

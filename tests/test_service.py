@@ -94,14 +94,17 @@ def test_service_snapshot_matches_offline_coreset(rng):
 
 def test_sharded_service_matches_per_shard_streams(rng):
     """Each shard's state equals ingesting that shard's round-robin
-    sub-stream alone; the snapshot is their union in shard order."""
+    sub-stream alone; the snapshot is their union in shard order.
+
+    placement="vmap" pins the row-granular drive this test describes
+    (the CPU auto default is the batch-granular pipeline drive)."""
     from repro.core.compose import unstack_shards
 
     P, cats, caps, spec, k = _partition_instance(rng)
     n = P.shape[0]
     tau, S = 12, 3
     svc = DiversityService(spec, k, tau=tau, caps=caps, num_shards=S,
-                           block_size=32)
+                           block_size=32, placement="vmap")
     for off in range(0, n, 150):
         svc.ingest(P[off:off + 150], cats[off:off + 150])
     caps_j = jnp.asarray(caps)
@@ -158,7 +161,156 @@ def test_sharded_ingest_requires_multiple_shards(rng):
     with pytest.raises(ValueError):
         svc.ingest_sharded(P, cats)
     with pytest.raises(ValueError):
+        svc.ingest_pipeline(P, cats)
+    with pytest.raises(ValueError):
         DiversityService(spec, k, tau=8, caps=caps, num_shards=0)
+    # the row-granular drive must refuse a pipeline service rather than
+    # silently replacing its per-shard state list with a stacked state
+    pipe = DiversityService(spec, k, tau=8, caps=caps, num_shards=2,
+                            placement="pipeline")
+    with pytest.raises(ValueError, match="pipeline"):
+        pipe.ingest_sharded(P, cats)
+    with pytest.raises(ValueError):
+        DiversityService(spec, k, tau=8, caps=caps, num_shards=2,
+                         placement="nope")
+
+
+def test_placement_resolution(rng):
+    """Explicit placements stick; auto resolves per backend/devices (on
+    the CPU test environment: pipeline for sharded, vmap for 1 shard)."""
+    import jax
+
+    P, cats, caps, spec, k = _partition_instance(rng, n=50)
+    for pl in ("vmap", "shard_map", "pipeline"):
+        svc = DiversityService(spec, k, tau=8, caps=caps, num_shards=2,
+                               placement=pl)
+        assert svc.placement == pl
+    auto = DiversityService(spec, k, tau=8, caps=caps, num_shards=2)
+    if jax.default_backend() == "cpu":
+        assert auto.placement == "pipeline"
+    assert DiversityService(spec, k, tau=8, caps=caps).placement == "vmap"
+
+
+def test_shard_map_placement_matches_vmap(rng):
+    """The shard_map drive is the same scan under a different parallel
+    drive: bit-identical service state to the vmap drive."""
+    P, cats, caps, spec, k = _partition_instance(rng)
+    svcs = {
+        pl: DiversityService(spec, k, tau=12, caps=caps, num_shards=2,
+                             block_size=32, placement=pl)
+        for pl in ("vmap", "shard_map")
+    }
+    for off in range(0, P.shape[0], 150):
+        for svc in svcs.values():
+            svc.ingest(P[off:off + 150], cats[off:off + 150])
+    a, b = svcs["vmap"].state, svcs["shard_map"].state
+    for f in a._fields:
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f))), f
+    ra = svcs["vmap"].query(DiversityQuery(k=k))
+    rb = svcs["shard_map"].query(DiversityQuery(k=k))
+    assert ra.indices.tolist() == rb.indices.tolist()
+
+
+def test_pipeline_placement_matches_per_batch_streams(rng):
+    """Pipeline placement: batch b goes wholly to shard b % S; each shard
+    state equals ingesting its own batch sub-stream through the plain
+    scan; the snapshot is the shard-major union; queries answer on it."""
+    from repro.core.matroid import PartitionMatroid
+    from repro.core.streaming import ingest_batch, init_stream_state
+
+    P, cats, caps, spec, k = _partition_instance(rng)
+    n, batch, tau, S = P.shape[0], 100, 12, 2
+    svc = DiversityService(spec, k, tau=tau, caps=caps, num_shards=S,
+                           block_size=32, placement="pipeline")
+    for off in range(0, n, batch):
+        svc.ingest(P[off:off + batch], cats[off:off + batch])
+    assert isinstance(svc.state, list) and len(svc.state) == S
+    caps_j = jnp.asarray(caps)
+    union_src = []
+    for s in range(S):
+        st = init_stream_state(P.shape[1], 1, spec, k, tau)
+        for bi, off in enumerate(range(0, n, batch)):
+            if bi % S != s:
+                continue
+            m = min(batch, n - off)
+            pad = -m % 32
+            pts = np.concatenate(
+                [P[off:off + m], np.zeros((pad, P.shape[1]), np.float32)]
+            )
+            ca = np.concatenate(
+                [cats[off:off + m], np.full((pad, 1), -1, np.int32)]
+            )
+            st = ingest_batch(
+                st, jnp.asarray(pts), jnp.asarray(ca),
+                jnp.asarray(np.arange(m + pad) < m), spec, caps_j, k, tau,
+                base_index=off, block_size=32,
+            )
+        for f in st._fields:
+            assert np.array_equal(
+                np.asarray(getattr(st, f)), np.asarray(getattr(svc.state[s], f))
+            ), f"pipeline shard {s} field {f}"
+        cs = snapshot_coreset(st)
+        v = np.asarray(cs.valid)
+        union_src.append(np.asarray(cs.src_idx)[v])
+    _, _, src = svc.snapshot()
+    assert np.array_equal(src, np.concatenate(union_src))
+    r = svc.query(DiversityQuery(k=k))
+    m = PartitionMatroid(cats[:, 0], caps)
+    assert m.is_independent(list(r.indices))
+    # cache discipline: a no-op re-ingest keeps the fingerprint/cache warm
+    builds = svc.cache.stats.builds
+    pts_c, cats_c, _ = svc.snapshot()
+    rep = svc.ingest(pts_c[:1], cats_c[:1])
+    svc.query(DiversityQuery(k=k))
+    assert svc.cache.stats.builds == builds + (
+        1 if rep.coreset_changed else 0
+    )
+
+
+def test_warmup_compiles_ahead_of_time(rng):
+    """warmup() is a bit-exact no-op on the stream state, primes the jit
+    cache for the bucketed ingest/query shapes, and makes the first real
+    query cheap. Works before the first ingest (given d) and after."""
+    P, cats, caps, spec, k = _partition_instance(rng, n=300)
+    svc = DiversityService(spec, k, tau=12, caps=caps)
+    with pytest.raises(ValueError):
+        svc.warmup()  # no state yet and no dimension given
+    rep = svc.warmup(d=P.shape[1], ingest_sizes=(300,))
+    assert any(key.startswith("ingest[") for key in rep)
+    assert rep["queries"].startswith("skipped")
+    assert svc.n_offered == 0  # warmup offered nothing to the stream
+    svc.ingest(P, cats)
+    rep2 = svc.warmup(ks=(k,), query_batch_sizes=(1,))
+    assert f"query[sum k={k} b=1]" in rep2
+    fp = svc._fingerprint
+    builds = svc.cache.stats.builds
+    assert builds == 1  # warmup built the matrix once
+    res = svc.query(DiversityQuery(k=k))
+    assert res.from_cache and svc.cache.stats.builds == builds
+    assert svc._fingerprint == fp
+    # parity with a never-warmed service over the same stream
+    ref = DiversityService(spec, k, tau=12, caps=caps)
+    ref.ingest(P, cats)
+    r2 = ref.query(DiversityQuery(k=k))
+    assert res.indices.tolist() == r2.indices.tolist()
+    assert res.diversity == r2.diversity
+
+
+def test_warmup_sharded_states_unchanged(rng):
+    """Sharded warmup primes without perturbing any shard state (the
+    all-invalid batch is a scan no-op) for both sharded placements."""
+    P, cats, caps, spec, k = _partition_instance(rng, n=200)
+    for pl in ("vmap", "pipeline"):
+        svc = DiversityService(spec, k, tau=12, caps=caps, num_shards=2,
+                               block_size=32, placement=pl)
+        svc.ingest(P[:100], cats[:100])
+        before = svc.snapshot()
+        svc.warmup(ingest_sizes=(100,), ks=(k,))
+        after = svc.snapshot()
+        for a, b in zip(before, after):
+            assert np.array_equal(a, b), pl
+        svc.ingest(P[100:], cats[100:])  # service still ingests fine
 
 
 # --------------------------------------------------------------------------
