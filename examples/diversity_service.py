@@ -1,6 +1,9 @@
-"""Online diversity service end to end: a simulated recommendation stream is
-ingested in batches (resumable Alg.-2 scan), then bursts of heterogeneous
-user queries are answered from the cached coreset distance matrix — the
+"""Online diversity serving end to end: a simulated recommendation stream
+is ingested asynchronously (background submit worker publishing epoch
+snapshots of the resumable Alg.-2 scan), TWO tenants — different metrics,
+one physical stream — answer bursts of heterogeneous queries from their
+own cached coreset distance matrices, and the single-tenant
+``DiversityService`` façade shows the historical API unchanged — the
 paper's web-search/recommendation workload (§1) with the coreset as the
 *only* serving state.
 
@@ -10,54 +13,91 @@ import numpy as np
 
 from repro.core import solve_dmmc
 from repro.core.matroid import MatroidSpec
-from repro.serve.diversity import DiversityQuery, DiversityService
+from repro.serve.diversity import (
+    DiversityQuery,
+    DiversityService,
+    QueryFrontend,
+    StreamRuntime,
+)
 
 
-def main():
-    rng = np.random.default_rng(7)
-    n, h, k, tau = 20000, 16, 8, 32
-
-    # a songs-like catalog: 16 genres, skewed sizes, genre caps
+def make_catalog(rng, n, h):
+    """A songs-like catalog: 16 genres, skewed sizes, genre caps."""
     genre = rng.choice(h, n, p=rng.dirichlet(np.ones(h)))
     basis = rng.normal(size=(5, 64))
     points = (rng.normal(size=(h, 5))[genre] * 2 @ basis
               + rng.normal(size=(n, 64))).astype(np.float32)
     caps = np.full(h, 2, np.int32)
     spec = MatroidSpec("partition", num_categories=h, gamma=1)
+    return points, genre, caps, spec
 
-    svc = DiversityService(spec, k, tau=tau, caps=caps, metric="cosine")
-    for off in range(0, n, 1000):  # the catalog arrives in batches
-        rep = svc.ingest(points[off:off + 1000], genre[off:off + 1000, None])
-    print(f"ingested {rep.total} items; serving state = "
-          f"{rep.coreset_size}-point coreset (+{tau + 1}-center scan state)")
 
-    # a burst of user queries: different result sizes, genre filters, caps
-    burst = [
-        DiversityQuery(k=8),                                   # homepage
-        DiversityQuery(k=4, allowed_cats=frozenset(range(4))), # rock tab
-        DiversityQuery(k=6, caps=(1,) * h),                    # one per genre
-        DiversityQuery(k=8, variant="tree"),                   # playlist arc
-        DiversityQuery(k=8, variant="tree",                    # same, but the
-                       engine_hint="jit_greedy"),              # fast greedy
-    ]
-    results = svc.query_batch(burst)
-    for q, r in zip(burst, results):
-        print(f"  k={q.k} variant={q.variant:<4} engine={r.engine:<4} "
-              f"cached={r.from_cache} div={r.diversity:9.3f} "
-              f"items={sorted(r.indices.tolist())}")
-    s = svc.cache.stats
-    print(f"cache: {s.builds} pdist build(s), {s.hits} hits "
-          f"({len(results)} queries answered on one matrix)")
+def main():
+    rng = np.random.default_rng(7)
+    n, h, k, tau = 20000, 16, 8, 32
+    points, genre, caps, spec = make_catalog(rng, n, h)
+
+    # ---- the layered runtime: one stream, async ingest, two tenants ----
+    rt = StreamRuntime(spec, k, tau=tau, caps=caps)  # euclidean stream
+    fe = QueryFrontend(rt)
+    # tenant 2: same stream, cosine geometry, its own cached matrix
+    fe.register_tenant("cosine", metric="cosine")
+
+    with rt:  # the catalog arrives in non-blocking batches
+        for off in range(0, n, 1000):
+            rt.submit(points[off:off + 1000], genre[off:off + 1000, None])
+        epoch = fe.flush()  # freshness barrier: everything submitted is in
+        snap = rt.latest()
+        print(f"ingested {snap.n_offered} items asynchronously; epoch "
+              f"{epoch} serves a {snap.size}-point coreset "
+              f"(+{tau + 1}-center scan state)")
+
+        # a burst of user queries per tenant: result sizes, genre filters,
+        # caps — answered on each tenant's own cached matrix
+        burst = [
+            DiversityQuery(k=8),                                   # homepage
+            DiversityQuery(k=4, allowed_cats=frozenset(range(4))), # rock tab
+            DiversityQuery(k=6, caps=(1,) * h),                    # 1/genre
+            DiversityQuery(k=8, variant="tree"),                   # playlist
+            DiversityQuery(k=8, variant="tree",                    # same, fast
+                           engine_hint="jit_greedy"),              # greedy
+        ]
+        for tenant in ("default", "cosine"):
+            results = fe.query_batch(burst, tenant=tenant,
+                                     min_epoch=epoch)
+            print(f"tenant {tenant!r} (metric="
+                  f"{fe.tenants.get(tenant).metric}):")
+            for q, r in zip(burst, results):
+                print(f"  k={q.k} variant={q.variant:<4} "
+                      f"engine={r.engine:<15} epoch={r.epoch} "
+                      f"div={r.diversity:9.3f} "
+                      f"items={sorted(r.indices.tolist())}")
+        st = fe.stats()
+        print(f"stats: {st['cache']['builds']} pdist build(s) for "
+              f"{len(st['tenants'])} tenants over one stream, "
+              f"{st['cache']['hits']} cache hits, "
+              f"{st['epochs_published']} epoch(s) published, "
+              f"{st['snapshot_materializations']} materialization(s)")
+
+    # ---- the single-tenant façade: the historical API, unchanged ----
+    svc = DiversityService(spec, k, tau=tau, caps=caps)
+    for off in range(0, n, 1000):
+        svc.ingest(points[off:off + 1000], genre[off:off + 1000, None])
+    res = svc.query_batch(burst)[0]
 
     # the cached answer matches the offline driver's answer (the fast
     # engines guarantee the same selection; the host engine also matches
     # the offline selection *order* bit for bit)
     sol = solve_dmmc(points, k, spec, cats=genre[:, None], caps=caps,
-                     tau=tau, setting="streaming", metric="cosine")
-    assert sorted(results[0].indices.tolist()) == sorted(sol.indices.tolist())
-    assert results[0].diversity == sol.diversity
+                     tau=tau, setting="streaming")
+    assert sorted(res.indices.tolist()) == sorted(sol.indices.tolist())
+    assert res.diversity == sol.diversity
+    # ... and the async runtime's default tenant answered the same
+    # query identically: same stream content, same coreset
+    first = fe.query(burst[0], tenant="default")
+    assert sorted(first.indices.tolist()) == sorted(sol.indices.tolist())
     print(f"parity with offline solve_dmmc confirmed "
-          f"(div={sol.diversity:.3f})")
+          f"(div={sol.diversity:.3f}) for the façade AND the async runtime")
 
 
 if __name__ == "__main__":

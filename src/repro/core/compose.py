@@ -71,6 +71,28 @@ def snapshot_shards(sts: StreamState) -> Coreset:
     )
 
 
+def snapshot_at_epoch(
+    states: Union[StreamState, Sequence[StreamState]],
+) -> Coreset:
+    """Union coreset of whatever state collection an ingestion drive owns —
+    the epoch-materialization entry point of the serving runtime.
+
+    Accepts every placement's state layout and dispatches to the matching
+    §3 composition: a single ``StreamState`` (unsharded), a stacked state
+    with a leading shard axis (the ``vmap``/``shard_map`` drives), or a
+    list of per-shard states (the ``pipeline`` placement). Row order is
+    shard-major in every case, identical to
+    ``union_coresets([snapshot_coreset(s) for s in shards])``, so epochs
+    materialized under different drives of the same deal are comparable
+    row for row.
+    """
+    if isinstance(states, StreamState):
+        if states.cvalid.ndim == 2:
+            return snapshot_shards(states)
+        return snapshot_coreset(states)
+    return union_coresets([snapshot_coreset(s) for s in states])
+
+
 def compact_coreset(cs: Coreset) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Host-side (points, cats, src_idx) of the valid rows, buffer order."""
     valid = np.asarray(cs.valid)

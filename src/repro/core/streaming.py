@@ -397,7 +397,16 @@ def init_stream_state(
 
     The returned state is a pure pytree of static-shape buffers: feed it to
     ``ingest_batch`` any number of times, snapshot with ``snapshot_coreset``.
+
+    ``tau >= 2``: the scan unconditionally opens centers for the first two
+    stream points (Alg. 2's anchors) before any restructure can run, so a
+    smaller tau could enter a general step already over budget — a state
+    the radius-variant restructure bookkeeping (and the blocked scan's
+    "an over-tau count only follows an open" staleness invariant) is
+    allowed to assume impossible.
     """
+    if tau < 2:
+        raise ValueError(f"tau must be >= 2, got {tau}")
     tcap = tau + 1
     if slot_cap is None:
         slot_cap = default_slot_cap(spec, k)
@@ -413,6 +422,50 @@ def init_stream_state(
         ds=jnp.full((tcap, slot_cap), -1, jnp.int32),
         overflow=jnp.int32(0),
     )
+
+
+def _epoch_stats_impl(st: StreamState):
+    """Device-side epoch statistics of a scan state: ``(count, h1, h2)``.
+
+    The coreset is determined by which ``(center, slot)`` cells are live and
+    which stream row each holds, i.e. by ``(dv & cvalid, ds)``. Instead of
+    pulling those buffers to the host and hashing them per ingest (the
+    historical fingerprint — an O(buffers) host sync on the serving hot
+    path), this reduces them *on device* to three scalars: the live-cell
+    count (from the same per-center count tables the blocked precheck
+    uses) plus two independent position-mixed uint32 checksums, so the
+    epoch decision ("did the coreset change?") costs one O(1) host pull.
+    Positions enter each sum through distinct odd multipliers, so moving a
+    delegate between cells — or swapping two — changes the value; two
+    checksums with different mixes make an accidental collision of a real
+    change astronomically unlikely. Accepts a single state or a stacked
+    per-shard state (the reductions flatten every leading axis).
+    """
+    valid = st.dv & st.cvalid[..., None]
+    vz = valid.reshape(-1)
+    src = jnp.where(vz, st.ds.reshape(-1).astype(jnp.uint32) + 1, 0)
+    pos = jnp.arange(vz.shape[0], dtype=jnp.uint32)
+    count = jnp.sum(jnp.sum(valid, axis=-1, dtype=jnp.int32))
+    h1 = jnp.sum(src * (pos * jnp.uint32(0x9E3779B1) | 1), dtype=jnp.uint32)
+    h2 = jnp.sum(
+        (src ^ (pos * jnp.uint32(0x85EBCA6B))) * jnp.uint32(0x27D4EB2F),
+        dtype=jnp.uint32,
+    )
+    return count, h1, h2
+
+
+# Not donated: it must observe the live serving state without consuming it
+# (the ingest entry points donate; this one only reads).
+epoch_stats = jax.jit(_epoch_stats_impl)
+
+
+def epoch_fingerprint(st: StreamState) -> tuple[int, int]:
+    """Host ``(fingerprint, coreset_size)`` of a scan state via one O(1)
+    device sync — the epoch-snapshot decision point of the serving runtime
+    (``serve.diversity.StreamRuntime``): ingestion calls this per batch and
+    publishes a new epoch only when the fingerprint moved."""
+    count, h1, h2 = jax.device_get(epoch_stats(st))
+    return hash((int(count), int(h1), int(h2))), int(count)
 
 
 def snapshot_coreset(st: StreamState) -> Coreset:

@@ -1,7 +1,19 @@
-"""Online diversity query service (the paper's web-search/recommendation
+"""Online diversity serving stack (the paper's web-search/recommendation
 workload, §1): keep a small (1-eps)-coreset as *the* serving state, ingest
-the stream incrementally, answer many heterogeneous queries against a cached
-coreset distance matrix — never touching the full dataset.
+the stream incrementally, answer many heterogeneous queries against cached
+coreset distance matrices — never touching the full dataset.
+
+Layered runtime (write path / read path / fan-out):
+
+    rt = StreamRuntime(spec, k=10, tau=64, caps=caps)     # one stream
+    fe = QueryFrontend(rt)                                # reads epochs
+    rt.submit(batch, cats)                # async: background ingest loop
+    fe.register_tenant("cosine", metric="cosine")         # cache fan-out
+    res = fe.query(DiversityQuery(k=10), tenant="cosine")
+    e = fe.flush()                        # freshness barrier -> epoch
+    fe.query(DiversityQuery(k=10), min_epoch=e)   # read your own writes
+
+Single-tenant façade (the historical API, unchanged):
 
     svc = DiversityService(spec, k=10, tau=64, caps=caps, metric="cosine")
     svc.ingest(batch, cats=batch_cats)          # any number of times
@@ -12,13 +24,19 @@ Queries dispatch through the ``core.solvers`` engine registry —
 ``engine="auto"`` (the default everywhere) batches sum queries under
 uniform/partition/transversal matroids onto the vmapped jit solver and
 keeps everything else on the host reference solvers, so every answer
-matches ``solve_dmmc`` on the same coreset. See README "Solver engines".
+matches ``solve_dmmc`` on the same coreset. See README "Serving
+architecture" and "Solver engines".
 """
 from .cache import CacheKey, CacheStats, CoresetEntry, DistanceCache
+from .frontend import QueryFrontend
 from .query import DiversityQuery, QueryResult
-from .service import DiversityService, IngestReport
+from .runtime import EpochSnapshot, IngestReport, StreamRuntime
+from .service import DiversityService
+from .tenants import DEFAULT_TENANT, Tenant, TenantRegistry
 
 __all__ = [
     "CacheKey", "CacheStats", "CoresetEntry", "DistanceCache",
     "DiversityQuery", "QueryResult", "DiversityService", "IngestReport",
+    "EpochSnapshot", "StreamRuntime", "QueryFrontend",
+    "Tenant", "TenantRegistry", "DEFAULT_TENANT",
 ]

@@ -1,4 +1,4 @@
-"""Coreset/distance-matrix cache for the diversity service.
+"""Coreset/distance-matrix cache for the diversity serving stack.
 
 One entry per ``(MatroidSpec, tau, metric)`` configuration: the compacted,
 metric-normalized coreset buffer plus its pairwise distance matrix (built by
@@ -8,18 +8,29 @@ ingestion that leaves the coreset unchanged (the common steady-state case:
 most stream points become non-delegates) keeps the matrix warm; the entry is
 rebuilt only when the coreset actually changed.
 
-Many services (tenants) may share one ``DistanceCache`` — one entry per
+Many tenants share one ``DistanceCache`` — one entry per
 ``(spec, tau, metric)`` key — so the cache is bounded: ``max_entries`` caps
 the entry count with least-recently-used eviction (per-key last-use
 ordering) and ``ttl_s`` expires entries that have not been *rebuilt* within
-the window, whichever comes first. Both are off by default.
+the window, whichever comes first. Both are off by default. The full
+expiry sweep is *lazy*: it runs on insert, and only once the earliest
+possible expiry deadline has actually passed (tracked in ``_next_sweep``) —
+a busy cache with nothing expiring pays per-key checks only, never a full
+scan per operation. Under capacity pressure expired entries are swept
+before any live entry is LRU-evicted.
 
-``CacheStats`` is the observability hook the tests and serve_bench use to
-assert "no pdist recomputation on the warm path".
+All public operations are thread-safe (the serving frontend answers
+queries from many threads while the ingest worker publishes epochs).
+
+``CacheStats`` is the observability hook: the tests, serve_bench, and
+``QueryFrontend.stats()`` use it to assert "no pdist recomputation on the
+warm path" and to watch hit/miss/eviction/expiry rates per cache.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+import threading
 import time
 from typing import Callable, NamedTuple, Optional
 
@@ -60,11 +71,22 @@ class CacheStats:
     invalidations: int = 0
     evictions: int = 0  # max_entries LRU evictions
     expirations: int = 0  # TTL expiries
+    sweeps: int = 0  # full expiry scans actually run (lazy: deadline-gated)
+
+    def snapshot(self) -> dict:
+        """Plain-dict copy (what ``QueryFrontend.stats()``/serve_bench
+        record — counters keep mutating underneath)."""
+        return dataclasses.asdict(self)
 
 
 def coreset_fingerprint(valid: np.ndarray, src_idx: np.ndarray) -> int:
     """Cheap content hash: the coreset is determined by (valid, src_idx)
-    since points/cats are copies of the stream rows named by src_idx."""
+    since points/cats are copies of the stream rows named by src_idx.
+
+    The serving runtime now fingerprints on-device without the host pull
+    (``core.streaming.epoch_fingerprint``); this host-side form remains for
+    callers that already hold the buffers.
+    """
     return hash((valid.tobytes(), src_idx.tobytes()))
 
 
@@ -87,6 +109,10 @@ class DistanceCache:
         self.max_entries = max_entries
         self.ttl_s = ttl_s
         self._clock = clock
+        self._mu = threading.RLock()
+        # earliest instant at which *any* entry can expire: a full sweep
+        # before this is provably a no-op, so inserts skip it (lazy sweep)
+        self._next_sweep = math.inf
         self.stats = CacheStats()
 
     def _expired(self, e: CoresetEntry) -> bool:
@@ -98,26 +124,40 @@ class DistanceCache:
     def _sweep_expired(self) -> None:
         """Drop every expired entry — without this, a ttl_s-only cache would
         keep abandoned tenants' O(m^2) matrices forever, since per-key
-        expiry in lookup() only fires for keys that are queried again."""
+        expiry in lookup() only fires for keys that are queried again.
+
+        Deadline-gated: callers consult ``_next_sweep`` first, so the scan
+        runs only when some entry has actually aged past the TTL (or under
+        capacity pressure), not on every insert.
+        """
+        if self.ttl_s is None:
+            return
+        self.stats.sweeps += 1
         for k in [k for k, e in self._entries.items() if self._expired(e)]:
             del self._entries[k]
             self.stats.expirations += 1
+        self._next_sweep = (
+            min(e.built_at for e in self._entries.values()) + self.ttl_s
+            if self._entries
+            else math.inf
+        )
 
     def lookup(self, key: CacheKey, fingerprint: int) -> Optional[CoresetEntry]:
-        e = self._entries.get(key)
-        if e is not None and self._expired(e):
-            self.stats.expirations += 1
-            del self._entries[key]
-            e = None
-        if e is not None and e.fingerprint == fingerprint:
-            self.stats.hits += 1
-            e.last_use = self._clock()
-            return e
-        if e is not None:
-            self.stats.invalidations += 1
-            del self._entries[key]
-        self.stats.misses += 1
-        return None
+        with self._mu:
+            e = self._entries.get(key)
+            if e is not None and self._expired(e):
+                self.stats.expirations += 1
+                del self._entries[key]
+                e = None
+            if e is not None and e.fingerprint == fingerprint:
+                self.stats.hits += 1
+                e.last_use = self._clock()
+                return e
+            if e is not None:
+                self.stats.invalidations += 1
+                del self._entries[key]
+            self.stats.misses += 1
+            return None
 
     def build(
         self,
@@ -127,26 +167,42 @@ class DistanceCache:
         src_idx: np.ndarray,
         fingerprint: int,
     ) -> CoresetEntry:
+        # the O(m^2) matrix is computed OUTSIDE the cache lock: a cold
+        # tenant's build must not block every other tenant's warm lookup.
+        # Two threads racing the same (key, fingerprint) both pay the
+        # build and the later insert wins — correct (same inputs, same
+        # matrix) and honest (both builds counted).
         D = self._build_fn(points)
-        self.stats.builds += 1
-        self._sweep_expired()
-        now = self._clock()
-        e = CoresetEntry(
-            points=points, cats=cats, src_idx=src_idx, D=D,
-            fingerprint=fingerprint, built_at=now, last_use=now,
-        )
-        self._entries[key] = e
-        if self.max_entries is not None:
-            while len(self._entries) > self.max_entries:
-                lru = min(self._entries, key=lambda k: self._entries[k].last_use)
-                del self._entries[lru]
-                self.stats.evictions += 1
-        return e
+        with self._mu:
+            self.stats.builds += 1
+            now = self._clock()
+            if now >= self._next_sweep:
+                self._sweep_expired()
+            e = CoresetEntry(
+                points=points, cats=cats, src_idx=src_idx, D=D,
+                fingerprint=fingerprint, built_at=now, last_use=now,
+            )
+            self._entries[key] = e
+            if self.ttl_s is not None:
+                self._next_sweep = min(self._next_sweep, now + self.ttl_s)
+            if self.max_entries is not None:
+                if len(self._entries) > self.max_entries:
+                    # capacity pressure: reclaim dead entries before
+                    # evicting a live tenant's matrix
+                    self._sweep_expired()
+                while len(self._entries) > self.max_entries:
+                    lru = min(
+                        self._entries, key=lambda k: self._entries[k].last_use
+                    )
+                    del self._entries[lru]
+                    self.stats.evictions += 1
+            return e
 
     def invalidate(self, key: CacheKey) -> None:
-        if key in self._entries:
-            del self._entries[key]
-            self.stats.invalidations += 1
+        with self._mu:
+            if key in self._entries:
+                del self._entries[key]
+                self.stats.invalidations += 1
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -1,0 +1,291 @@
+"""QueryFrontend: the read half of the diversity serving runtime.
+
+A frontend answers queries against the *published epochs* of one
+``StreamRuntime`` — never against the live device state — holding the
+per-tenant ``DistanceCache`` entries and the ``core.solvers`` registry
+dispatch that used to live inside ``DiversityService``:
+
+  epoch      every query resolves the newest published ``EpochSnapshot``
+             (``runtime.acquire``): stale-but-consistent while async
+             ingestion is in flight, freshest-available when idle. The
+             freshness contract is explicit — ``flush()`` barriers all
+             submitted batches into a new epoch and returns its number,
+             and ``query(..., min_epoch=e)`` blocks until an epoch >= e
+             serves the answer;
+  tenants    a ``TenantRegistry`` maps names to ``(spec, tau, metric,
+             caps, oracle)`` configurations sharing the one stream. Each
+             tenant's pdist matrix lives under its own cache key and is
+             invalidated exactly when a *changed* epoch is published (the
+             fingerprint moved) — §3 composability realized as cache
+             fan-out instead of stream duplication;
+  solve      per-query engine dispatch is unchanged from the single-tenant
+             service: ``engine="auto"`` partitions a batch across the
+             fastest eligible host-parity engines, hints opt into
+             non-parity engines, the matrix is fetched (and possibly
+             built) exactly once per batch.
+
+Thread-safe: any number of threads may query while the runtime's worker
+ingests; the cache serializes entry builds internally.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import geometry
+from ...core.final_solve import SubsetMatroidView
+from ...core.matroid import MatroidSpec, make_host_matroid
+from ...core.solvers import (
+    SolveContext,
+    SolveSpec,
+    get_engine,
+    partition_by_engine,
+)
+from .cache import CoresetEntry, DistanceCache
+from .query import DiversityQuery, QueryResult, candidate_mask
+from .runtime import EpochSnapshot, StreamRuntime
+from .tenants import DEFAULT_TENANT, Tenant, TenantRegistry
+
+
+class QueryFrontend:
+    """Serves diversity queries from published epochs of one runtime."""
+
+    def __init__(
+        self,
+        runtime: StreamRuntime,
+        *,
+        cache: Optional[DistanceCache] = None,
+        default_tenant: str = DEFAULT_TENANT,
+    ):
+        self.runtime = runtime
+        self.cache = cache if cache is not None else DistanceCache()
+        self.tenants = TenantRegistry()
+        self.default_tenant = self.register_tenant(default_tenant)
+
+    # ------------------------------------------------------------------
+    # tenants
+    # ------------------------------------------------------------------
+
+    def register_tenant(
+        self,
+        name: str,
+        *,
+        spec: Optional[MatroidSpec] = None,
+        tau: Optional[int] = None,
+        metric: Optional[geometry.Metric] = None,
+        caps: Optional[np.ndarray] = None,
+        oracle=None,
+    ) -> Tenant:
+        """Register one logical serving configuration over the shared
+        stream. Unspecified fields inherit the runtime's; a partition
+        tenant that passes no caps inherits the runtime's caps the same
+        way. Returns the (immutable) ``Tenant`` handle."""
+        rt = self.runtime
+        spec = rt.spec if spec is None else spec
+        metric = rt.metric if metric is None else metric
+        if str(metric) != str(rt.metric) and str(rt.metric) == "cosine":
+            # the stream stores cosine-normalized rows; the raw geometry a
+            # euclidean/sqeuclidean tenant needs is not recoverable from
+            # them — refuse loudly instead of silently solving on the
+            # unit sphere. (The reverse direction is fine: cosine
+            # normalization of raw rows is exact, and it is idempotent.)
+            raise ValueError(
+                f"tenant {name!r} wants metric {str(metric)!r} over a "
+                f"cosine-normalized stream; that geometry is not "
+                f"derivable from the stored rows — run a separate "
+                f"{str(metric)}-metric StreamRuntime instead"
+            )
+        if caps is None and spec.kind == "partition":
+            caps = rt.caps
+        return self.tenants.register(
+            name,
+            spec=spec,
+            tau=rt.tau if tau is None else tau,
+            metric=metric,
+            caps=caps,
+            oracle=rt.oracle if oracle is None else oracle,
+        )
+
+    def _resolve_tenant(self, tenant) -> Tenant:
+        if tenant is None:
+            return self.default_tenant
+        if isinstance(tenant, Tenant):
+            return tenant
+        return self.tenants.get(tenant)
+
+    # ------------------------------------------------------------------
+    # per-tenant cache entries
+    # ------------------------------------------------------------------
+
+    def _entry(
+        self, tenant: Tenant, snap: EpochSnapshot
+    ) -> tuple[CoresetEntry, bool]:
+        """Tenant's cache entry for one epoch (building the matrix only if
+        this epoch's fingerprint hasn't been built for this key)."""
+        e = self.cache.lookup(tenant.key, snap.fingerprint)
+        if e is not None:
+            return e, True
+        pts = snap.points
+        if tenant.metric != str(self.runtime.metric):
+            # the epoch stores stream-metric-normalized rows; a tenant on a
+            # different metric re-normalizes its private copy at build time
+            pts = np.asarray(
+                geometry.normalize_for_metric(
+                    jnp.asarray(pts, jnp.float32), tenant.metric
+                )
+            )
+        e = self.cache.build(
+            tenant.key, pts, snap.cats, snap.src_idx, snap.fingerprint
+        )
+        return e, False
+
+    # ------------------------------------------------------------------
+    # queries
+    # ------------------------------------------------------------------
+
+    def _host_matroid(
+        self, tenant: Tenant, snap: EpochSnapshot, entry: CoresetEntry,
+        spec: SolveSpec,
+    ):
+        m = entry.size
+        if tenant.spec.kind == "general":
+            base = make_host_matroid(
+                tenant.spec, None, None, snap.n_offered, spec.k,
+                tenant.oracle,
+            )
+            return SubsetMatroidView(base, entry.src_idx)
+        caps = (
+            tenant.caps
+            if spec.caps is None
+            else np.asarray(spec.caps, np.int32)
+        )
+        return make_host_matroid(tenant.spec, entry.cats, caps, m, spec.k)
+
+    def _solve_context(
+        self, tenant: Tenant, snap: EpochSnapshot, entry: CoresetEntry
+    ) -> SolveContext:
+        """Registry view of one cache entry (what every engine solves on)."""
+        return SolveContext(
+            D=entry.D,
+            spec=tenant.spec,
+            cats=entry.cats,
+            caps=tenant.caps,
+            matroid_fn=lambda spec: self._host_matroid(
+                tenant, snap, entry, spec
+            ),
+        )
+
+    def _solve_spec(
+        self, entry: CoresetEntry, q: DiversityQuery
+    ) -> SolveSpec:
+        return SolveSpec(
+            k=q.k,
+            variant=q.variant,
+            gamma=q.gamma,
+            caps=q.caps,
+            allow=candidate_mask(entry.cats, q.allowed_cats),
+        )
+
+    def query(
+        self,
+        q: DiversityQuery,
+        *,
+        tenant=None,
+        engine: str = "auto",
+        min_epoch: Optional[int] = None,
+    ) -> QueryResult:
+        """Answer one query on the named tenant's cached matrix over the
+        newest published epoch (see ``query_batch`` for the engine and
+        freshness semantics)."""
+        return self.query_batch(
+            [q], tenant=tenant, engine=engine, min_epoch=min_epoch
+        )[0]
+
+    def query_batch(
+        self,
+        queries: Sequence[DiversityQuery],
+        *,
+        tenant=None,
+        engine: str = "auto",
+        min_epoch: Optional[int] = None,
+    ) -> list[QueryResult]:
+        """Answer a batch of heterogeneous queries against ONE epoch and
+        ONE tenant cache entry.
+
+        ``engine="auto"`` partitions the batch across registry engines:
+        each query goes to the fastest eligible engine carrying the
+        host-parity guarantee (sum under uniform/partition/transversal ->
+        the vmapped batched solver; everything else -> the host reference
+        solvers), honoring per-query ``engine_hint`` opt-ins (e.g.
+        "jit_greedy" for approximate star/tree). Any other name forces
+        every query through that engine, raising if one is ineligible
+        ("vmap" is accepted as a legacy alias of "jit_sum").
+
+        ``min_epoch`` blocks until an epoch >= it is published (use the
+        epoch returned by ``flush()`` to read your own writes); without
+        it, the newest published epoch answers immediately — during
+        active ingestion that answer is stale-but-consistent, never torn.
+        """
+        queries = list(queries)
+        if not queries:
+            return []
+        t = self._resolve_tenant(tenant)
+        snap = self.runtime.acquire(min_epoch)
+        entry, cached = self._entry(t, snap)
+        ctx = self._solve_context(t, snap, entry)
+        specs = [self._solve_spec(entry, q) for q in queries]
+        groups = partition_by_engine(
+            ctx,
+            specs,
+            engine=engine,
+            hints=[q.engine_hint for q in queries],
+        )
+        results: list[Optional[QueryResult]] = [None] * len(queries)
+        for name, idxs in groups.items():
+            eng = get_engine(name)
+            for i, sol in zip(
+                idxs, eng.solve_batch(ctx, [specs[i] for i in idxs])
+            ):
+                loc = np.asarray(sol.local_indices, np.int64)
+                results[i] = QueryResult(
+                    indices=entry.src_idx[loc],
+                    local_indices=loc,
+                    diversity=sol.value,
+                    variant=queries[i].variant,
+                    engine=sol.engine,
+                    coreset_size=entry.size,
+                    from_cache=cached,
+                    epoch=snap.epoch,
+                    tenant=t.name,
+                )
+        return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    # freshness + observability
+    # ------------------------------------------------------------------
+
+    def flush(self, *, timeout: Optional[float] = 120.0) -> int:
+        """Barrier every submitted batch into a published epoch and return
+        its number (pass as ``min_epoch`` to read your own writes)."""
+        return self.runtime.flush(timeout=timeout)
+
+    def stats(self) -> dict:
+        """One observability snapshot: epoch/publication counters from the
+        runtime plus the shared cache's ``CacheStats``."""
+        lat = self.runtime.latest()
+        return {
+            "epoch": 0 if lat is None else lat.epoch,
+            "epoch_fingerprint": None if lat is None else lat.fingerprint,
+            "coreset_size": 0 if lat is None else lat.size,
+            "n_offered": self.runtime.n_offered,
+            "pending": self.runtime.pending,
+            "epochs_published": self.runtime.epochs_published,
+            "snapshot_materializations": (
+                self.runtime.snapshot_materializations
+            ),
+            "tenants": self.tenants.names(),
+            "cache_entries": len(self.cache),
+            "cache": self.cache.stats.snapshot(),
+        }

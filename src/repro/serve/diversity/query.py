@@ -49,6 +49,11 @@ class QueryResult:
     engine: str  # registry engine name ("jit_sum", "host_exhaustive", ...)
     coreset_size: int
     from_cache: bool
+    # which published EpochSnapshot answered (-1: pre-epoch caller) and
+    # which tenant's cache entry served it — the freshness/fan-out audit
+    # trail of the multi-tenant runtime
+    epoch: int = -1
+    tenant: Optional[str] = None
 
 
 def candidate_mask(

@@ -1,0 +1,811 @@
+"""StreamRuntime: the ingestion half of the diversity serving runtime.
+
+One runtime owns ONE physical stream — the resumable Alg.-2 scan state(s)
+under whichever placement drive the service resolved (single state, stacked
+vmap/shard_map state, or the pipeline placement's per-device state list) —
+and exposes two ways to feed it plus one way to read it:
+
+  ingest(points, cats)   synchronous: resume the scan, update the O(1)
+                         epoch fingerprint, return an ``IngestReport``
+                         (the historical ``DiversityService`` path);
+  submit(points, cats)   asynchronous: enqueue the batch onto a background
+                         ingest worker and return immediately. The worker
+                         drives the same jit entry points — JAX async
+                         dispatch overlaps consecutive batches — and
+                         *publishes epochs* as it drains, so ingestion and
+                         query answering stop blocking each other;
+  latest()/acquire()     read the newest *published* ``EpochSnapshot`` — an
+                         immutable host-side materialization of the coreset
+                         (compacted points/cats/src + fingerprint), built
+                         once per epoch instead of once per query. The
+                         query path (``QueryFrontend``) only ever touches
+                         these snapshots, never the live device state, so a
+                         query concurrent with ingestion always answers
+                         from a consistent epoch (possibly slightly stale)
+                         and a torn read is impossible by construction.
+
+Epoch semantics:
+
+* epochs are integers, strictly increasing from 1, published under the
+  runtime lock;
+* a new epoch *materializes* (device -> host compact of the union coreset,
+  ``core.compose.snapshot_at_epoch``) only when the coreset fingerprint
+  moved (``core.streaming.epoch_fingerprint`` — an O(1) host sync off the
+  per-center count tables); a forced publish of an unchanged coreset reuses
+  the previous epoch's buffers and just advances the counter;
+* the async worker publishes when its queue drains and at least every
+  ``publish_every`` ingested batches in between, so epoch staleness under
+  continuous load is bounded by ``publish_every`` batches;
+* ``flush()`` is the freshness barrier: wait until every submitted batch is
+  ingested, force-publish, and return the new epoch number. A reader that
+  needs everything it submitted can then pass that epoch as ``min_epoch``
+  to ``acquire`` (or ``QueryFrontend.query``) — the freshness contract.
+
+Errors raised by the worker are captured and re-raised on the next
+``submit``/``flush``; ``close()`` stops the worker (idempotent).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import queue
+import threading
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import geometry
+from ...core.compose import compact_coreset, snapshot_at_epoch
+from ...core.matroid import MatroidSpec
+from ...core.solvers.jit_sum import bucket_pow2 as _bucket_pow2
+from ...core.streaming import (
+    epoch_fingerprint,
+    ingest_batch_donated,
+    ingest_batch_sharded_donated,
+    ingest_batch_sharded_mapped,
+    init_sharded_states,
+    init_stream_state,
+    resolve_placement,
+)
+
+
+@dataclasses.dataclass
+class IngestReport:
+    n: int  # points in this batch
+    total: int  # stream points offered so far
+    coreset_size: int
+    coreset_changed: bool
+    ingest_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochSnapshot:
+    """One published, immutable serving epoch: the compacted union coreset
+    of the stream at a consistent instant, plus its content fingerprint.
+
+    Published snapshots are plain host arrays — they survive the donation
+    of the live scan state's buffers by later ingests, and any number of
+    reader threads can solve on them without synchronization.
+    """
+
+    epoch: int  # strictly increasing publication counter (from 1)
+    fingerprint: int  # coreset content hash at publication
+    points: np.ndarray  # f32[m, d] stream-metric-normalized coreset rows
+    cats: np.ndarray  # int32[m, gamma]
+    src_idx: np.ndarray  # int64[m] global stream indices
+    n_offered: int  # stream points ingested when this epoch was published
+    published_at: float  # time.monotonic() at publication
+
+    @property
+    def size(self) -> int:
+        return int(self.src_idx.shape[0])
+
+
+_STOP = object()  # worker shutdown sentinel
+
+
+class StreamRuntime:
+    """Ingestion engine + epoch publisher for one physical stream."""
+
+    def __init__(
+        self,
+        spec: MatroidSpec,
+        k: int,
+        *,
+        tau: int,
+        metric: geometry.Metric = "euclidean",
+        caps: Optional[np.ndarray] = None,
+        slot_cap: Optional[int] = None,
+        variant: str = "radius",
+        eps: float = 0.5,
+        c_const: int = 32,
+        oracle=None,
+        num_shards: int = 1,
+        block_size: int = 128,
+        placement: str = "auto",
+        publish_every: int = 8,
+        max_pending: int = 64,
+        on_publish: Optional[Callable[[EpochSnapshot], None]] = None,
+    ):
+        if spec.kind == "general" and oracle is None:
+            raise ValueError("general matroid service needs a host oracle")
+        if spec.kind == "partition" and caps is None:
+            raise ValueError("partition matroid service needs per-category caps")
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        if publish_every < 1:
+            raise ValueError(f"publish_every must be >= 1, got {publish_every}")
+        # resolves "auto" against jax.devices() once, at construction
+        self.placement = resolve_placement(placement, num_shards)
+        self.spec = spec
+        self.k = int(k)
+        self.tau = int(tau)
+        self.metric = metric
+        self.caps = None if caps is None else np.asarray(caps, np.int32)
+        self._caps_j = None if caps is None else jnp.asarray(caps, jnp.int32)
+        self.slot_cap = slot_cap
+        self.stream_variant = variant
+        self.eps = float(eps)
+        self.c_const = int(c_const)
+        self.oracle = oracle
+        self.num_shards = int(num_shards)
+        self.block_size = int(block_size)
+        self.publish_every = int(publish_every)
+        self.on_publish = on_publish
+        # single-shard state, stacked shard state (vmap/shard_map), or a
+        # list of per-shard states (pipeline)
+        self._state = None
+        self._gamma_width = max(spec.gamma, 1)
+        self.n_offered = 0
+        self._fingerprint: Optional[int] = None
+        self._coreset_size = 0
+        self._rr = 0  # pipeline round-robin cursor (batch granularity)
+        # per-shard (fingerprint, size) pulls for the pipeline drive: only
+        # the shard an ingest touched is re-pulled (entry set to None), so
+        # the per-ingest host-sync count stays O(1), not O(num_shards)
+        self._fp_cache: Optional[list] = None
+        # --- epoch publication state (all guarded by _cv's lock) ---
+        self._cv = threading.Condition(threading.RLock())
+        self._published: Optional[EpochSnapshot] = None
+        self._dirty = False  # ingested since last publish
+        self._unpublished = 0  # ingests since last publish (staleness bound)
+        self.epochs_published = 0
+        self.snapshot_materializations = 0
+        # --- async ingestion (lazy worker; see submit/flush/close) ---
+        self._queue: queue.Queue = queue.Queue(maxsize=int(max_pending))
+        self._worker: Optional[threading.Thread] = None
+        self._worker_err: Optional[BaseException] = None
+        self._pending = 0  # submitted batches not yet fully ingested
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    # synchronous ingestion (the scan itself)
+    # ------------------------------------------------------------------
+
+    @property
+    def state(self):
+        """The live scan state: a ``StreamState`` (single shard), a
+        stacked one (vmap/shard_map), or a list (pipeline).
+
+        The ingest hot path *donates* this state's buffers to XLA (the
+        steady-state win of not copying the delegate store every batch),
+        so a reference captured here is invalidated by the next
+        ``ingest`` — read or copy (``jax.tree_util.tree_map(jnp.copy,
+        rt.state)``) anything you need to keep before ingesting again.
+        Published ``EpochSnapshot``s are host copies and never affected.
+        """
+        return self._state
+
+    @property
+    def fingerprint(self) -> Optional[int]:
+        """Coreset content fingerprint as of the last ingest (``None``
+        until something was ingested or ``ensure_state`` ran)."""
+        return self._fingerprint
+
+    def _check_cats(self, n: int, cats: Optional[np.ndarray]) -> np.ndarray:
+        if cats is None:
+            return np.zeros((n, self._gamma_width), np.int32)
+        cats_arr = np.asarray(cats, np.int32).reshape(n, -1)
+        if cats_arr.shape[1] != self._gamma_width:
+            raise ValueError(
+                f"cats width {cats_arr.shape[1]} != spec gamma "
+                f"{self._gamma_width}"
+            )
+        if (
+            self.spec.kind == "partition"
+            and cats_arr.shape[1] > 1
+            and np.any(cats_arr[:, 1:] >= 0)
+        ):
+            # refuse at the door rather than truncating labels inside the
+            # scan/solvers: a partition matroid is single-label by
+            # definition, multi-label points need a transversal spec
+            raise ValueError(
+                "partition service got a point with >1 category label; "
+                "use a transversal MatroidSpec for multi-label data"
+            )
+        return cats_arr
+
+    def ensure_state(self, d: int) -> None:
+        """Initialize the (placement-appropriate) empty scan state for
+        point dimension ``d`` if none exists yet, and fingerprint it —
+        the pre-ingest warmup entry point."""
+        with self._cv:
+            if self._state is not None:
+                return
+            if self.num_shards > 1 and self.placement == "pipeline":
+                self._init_pipeline_states(d)
+            elif self.num_shards > 1:
+                self._state = init_sharded_states(
+                    self.num_shards, d, self._gamma_width, self.spec,
+                    self.k, self.tau, slot_cap=self.slot_cap,
+                )
+            else:
+                self._state = init_stream_state(
+                    d, self._gamma_width, self.spec, self.k, self.tau,
+                    slot_cap=self.slot_cap,
+                )
+            # the empty state has an empty coreset: fingerprint it so a
+            # zero-ingest warmup leaves the runtime in a consistent state
+            self._fingerprint, self._coreset_size = (
+                self._fingerprint_and_size()
+            )
+            self._dirty = True  # first refresh publishes the empty epoch
+
+    def point_dim(self) -> Optional[int]:
+        if self._state is None:
+            return None
+        x1 = (
+            self._state[0].x1
+            if isinstance(self._state, list)
+            else self._state.x1
+        )
+        return int(x1.shape[-1])
+
+    def ingest(
+        self,
+        points: np.ndarray,
+        cats: Optional[np.ndarray] = None,
+        *,
+        pad_to: Optional[int] = None,
+    ) -> IngestReport:
+        """Feed one batch of the stream (any size) into the scan state.
+
+        With ``num_shards > 1`` the batch is dealt round-robin across the
+        per-shard scan states (``ingest_sharded``); otherwise it resumes the
+        single blocked scan. Either way batches are padded to a multiple of
+        ``block_size`` with invalid rows — a bit-exact no-op for the scan
+        that keeps the jit cache keyed on a handful of bucketed shapes
+        instead of recompiling for every ragged final batch. ``pad_to``
+        raises the padded length further (``warmup`` uses it to compile a
+        target batch shape off an empty batch).
+
+        Thread-safe (the async worker calls this too); does NOT publish an
+        epoch — publication happens in ``refresh``/``flush`` or on the
+        worker's drain cadence.
+        """
+        with self._cv:
+            if self.num_shards > 1:
+                if self.placement == "pipeline":
+                    return self.ingest_pipeline(points, cats, pad_to=pad_to)
+                return self.ingest_sharded(points, cats, pad_to=pad_to)
+            t0 = time.perf_counter()
+            pts = np.asarray(points, np.float32)
+            n, d = pts.shape
+            cats_arr = self._check_cats(n, cats)
+            if self._state is None:
+                self._state = init_stream_state(
+                    d, self._gamma_width, self.spec, self.k, self.tau,
+                    slot_cap=self.slot_cap,
+                )
+            total = max(n, pad_to or 0)
+            pad = total + (-total % self.block_size) - n
+            if pad:
+                pts = np.concatenate([pts, np.zeros((pad, d), np.float32)])
+                cats_arr = np.concatenate(
+                    [cats_arr, np.full((pad, self._gamma_width), -1, np.int32)]
+                )
+            valid = np.arange(n + pad) < n
+            pts_norm = geometry.normalize_for_metric(
+                jnp.asarray(pts, jnp.float32), self.metric
+            )
+            # donated: the previous state is dropped on reassignment, so XLA
+            # aliases its buffers into the new state instead of copying the
+            # whole delegate store every call (the dominant fixed cost of a
+            # steady-state no-op batch)
+            self._state = ingest_batch_donated(
+                self._state,
+                pts_norm,
+                jnp.asarray(cats_arr),
+                jnp.asarray(valid),
+                self.spec,
+                self._caps_j,
+                self.k,
+                self.tau,
+                base_index=jnp.int32(self.n_offered),
+                variant=self.stream_variant,
+                eps=self.eps,
+                c_const=self.c_const,
+                block_size=self.block_size,
+            )
+            self.n_offered += n
+            return self._report(n, t0)
+
+    def ingest_sharded(
+        self,
+        points: np.ndarray,
+        cats: Optional[np.ndarray] = None,
+        *,
+        pad_to: Optional[int] = None,
+    ) -> IngestReport:
+        """Deal one batch round-robin across ``num_shards`` independent
+        scan states and ingest all shards in one call — the vmap drive on a
+        single device, the ``shard_map``-over-mesh drive when ``placement``
+        resolved to it (per-device shard groups run as real parallel
+        programs).
+
+        Each shard sees its own sub-stream; per §3 composability the union
+        of the per-shard coresets (the epoch snapshot) is a coreset of the
+        full stream. Global ``src_idx`` bookkeeping is preserved by passing
+        explicit per-row indices.
+        """
+        if self.num_shards < 2:
+            raise ValueError("ingest_sharded needs num_shards >= 2")
+        if self.placement == "pipeline":
+            # a pipeline runtime keeps a *list* of per-shard states; the
+            # stacked-state drives here would corrupt it — route through
+            # ingest()/ingest_pipeline, or construct with placement="vmap"
+            # or "shard_map" for the row-granular deal
+            raise ValueError(
+                "ingest_sharded is the row-granular drive; this service "
+                "resolved placement='pipeline' (batch-granular) — use "
+                "ingest()/ingest_pipeline, or pass placement='vmap' or "
+                "'shard_map'"
+            )
+        with self._cv:
+            t0 = time.perf_counter()
+            pts = np.asarray(points, np.float32)
+            n, d = pts.shape
+            cats_arr = self._check_cats(n, cats)
+            S = self.num_shards
+            if self._state is None:
+                self._state = init_sharded_states(
+                    S, d, self._gamma_width, self.spec, self.k, self.tau,
+                    slot_cap=self.slot_cap,
+                )
+            if str(self.metric) == "euclidean":
+                pts_norm = pts  # identity metric: skip the device round-trip
+            else:
+                pts_norm = np.asarray(
+                    geometry.normalize_for_metric(
+                        jnp.asarray(pts, jnp.float32), self.metric
+                    )
+                )
+            # per-shard sub-batch length, bucketed so ragged batches reuse a
+            # handful of jit shapes; the per-shard block never exceeds it (a
+            # 512-point deal across 8 shards is ONE 64-point block per
+            # shard, not a 64-point block padded to 128)
+            mm0 = -(-max(n, pad_to or 0) // S)
+            sb = min(self.block_size, _bucket_pow2(mm0))
+            mm = mm0 + (-mm0 % sb)
+            Pb = np.zeros((S, mm, d), np.float32)
+            Cb = np.full((S, mm, self._gamma_width), -1, np.int32)
+            Vb = np.zeros((S, mm), bool)
+            Sb = np.full((S, mm), -1, np.int32)
+            if n > 0 and n % S == 0:
+                # whole deal in three O(n) reshapes: round-robin row r of
+                # the batch lands at [r % S, r // S]
+                q = n // S
+                Pb[:, :q] = pts_norm.reshape(q, S, d).transpose(1, 0, 2)
+                Cb[:, :q] = cats_arr.reshape(q, S, -1).transpose(1, 0, 2)
+                Vb[:, :q] = True
+                Sb[:, :q] = (
+                    self.n_offered
+                    + np.arange(n, dtype=np.int64).reshape(q, S).T
+                )
+            else:
+                for s in range(S):
+                    rows = np.arange(s, n, S)
+                    r = rows.shape[0]
+                    Pb[s, :r] = pts_norm[rows]
+                    Cb[s, :r] = cats_arr[rows]
+                    Vb[s, :r] = True
+                    Sb[s, :r] = self.n_offered + rows
+            ingest = (
+                ingest_batch_sharded_donated
+                if self.placement == "vmap"
+                else functools.partial(
+                    ingest_batch_sharded_mapped, donate=True
+                )
+            )
+            self._state = ingest(
+                self._state,
+                jnp.asarray(Pb),
+                jnp.asarray(Cb),
+                jnp.asarray(Vb),
+                jnp.asarray(Sb),
+                self.spec,
+                self._caps_j,
+                self.k,
+                self.tau,
+                variant=self.stream_variant,
+                eps=self.eps,
+                c_const=self.c_const,
+                block_size=sb,
+            )
+            self.n_offered += n
+            return self._report(n, t0)
+
+    def _init_pipeline_states(self, d: int) -> None:
+        devs = jax.devices()
+        nd = len(devs)
+        self._state = [
+            jax.device_put(
+                init_stream_state(
+                    d, self._gamma_width, self.spec, self.k, self.tau,
+                    slot_cap=self.slot_cap,
+                ),
+                devs[i % nd],
+            )
+            for i in range(self.num_shards)
+        ]
+
+    def ingest_pipeline(
+        self,
+        points: np.ndarray,
+        cats: Optional[np.ndarray] = None,
+        *,
+        pad_to: Optional[int] = None,
+    ) -> IngestReport:
+        """Route one whole batch to the next shard (batch-granular
+        round-robin) and resume that shard's plain blocked scan.
+
+        The stream partition is by batches instead of rows — still a
+        partition, so §3 union composability is untouched — and each
+        ingest is the *same* jit executable as the unsharded path: per
+        batch, sharding costs nothing. Shard states are pinned round-robin
+        across ``jax.devices()``, so consecutive batches land on different
+        devices and async dispatch can overlap them when the hardware has
+        more than one — the natural substrate of the async ``submit``
+        worker. Callers that feed a few huge batches (rather than a stream
+        of them) should prefer the row-granular drives, which spread every
+        batch across all shards.
+        """
+        if self.num_shards < 2:
+            raise ValueError("ingest_pipeline needs num_shards >= 2")
+        with self._cv:
+            t0 = time.perf_counter()
+            pts = np.asarray(points, np.float32)
+            n, d = pts.shape
+            cats_arr = self._check_cats(n, cats)
+            if self._state is None:
+                self._init_pipeline_states(d)
+            total = max(n, pad_to or 0)
+            pad = total + (-total % self.block_size) - n
+            if pad:
+                pts = np.concatenate([pts, np.zeros((pad, d), np.float32)])
+                cats_arr = np.concatenate(
+                    [cats_arr, np.full((pad, self._gamma_width), -1, np.int32)]
+                )
+            valid = np.arange(n + pad) < n
+            pts_norm = geometry.normalize_for_metric(
+                jnp.asarray(pts, jnp.float32), self.metric
+            )
+            i = self._rr % self.num_shards
+            if n > 0:  # empty (warmup) batches don't consume a shard slot
+                self._rr += 1
+            if self._fp_cache is not None:
+                self._fp_cache[i] = None  # this shard's pull is now stale
+            self._state[i] = ingest_batch_donated(
+                self._state[i],
+                pts_norm,
+                jnp.asarray(cats_arr),
+                jnp.asarray(valid),
+                self.spec,
+                self._caps_j,
+                self.k,
+                self.tau,
+                base_index=jnp.int32(self.n_offered),
+                variant=self.stream_variant,
+                eps=self.eps,
+                c_const=self.c_const,
+                block_size=self.block_size,
+            )
+            self.n_offered += n
+            return self._report(n, t0)
+
+    def _report(self, n: int, t0: float) -> IngestReport:
+        fp, size = self._fingerprint_and_size()
+        changed = fp != self._fingerprint
+        self._fingerprint = fp
+        self._coreset_size = size
+        self._dirty = True
+        self._unpublished += 1
+        return IngestReport(
+            n=n,
+            total=self.n_offered,
+            coreset_size=size,
+            coreset_changed=changed,
+            ingest_s=time.perf_counter() - t0,
+        )
+
+    def _fingerprint_and_size(self) -> tuple[int, int]:
+        """Coreset fingerprint via the O(1)-host-sync device reduction
+        (``core.streaming.epoch_fingerprint``): three scalars per ingest
+        instead of pulling and hashing the delegate buffers.
+
+        For the pipeline drive only the shard the last ingest touched is
+        re-reduced; the rest reuse their cached (fingerprint, size).
+        """
+        if isinstance(self._state, list):
+            if self._fp_cache is None:
+                self._fp_cache = [None] * len(self._state)
+            for j, st in enumerate(self._state):
+                if self._fp_cache[j] is None:
+                    self._fp_cache[j] = epoch_fingerprint(st)
+            # the union is determined by the shard-major sequence of shard
+            # coresets, so hashing the per-shard hashes is an equivalent
+            # content key
+            return (
+                hash(tuple(fp for fp, _sz in self._fp_cache)),
+                int(sum(sz for _fp, sz in self._fp_cache)),
+            )
+        return epoch_fingerprint(self._state)
+
+    # ------------------------------------------------------------------
+    # epoch publication
+    # ------------------------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        """Submitted batches not yet ingested by the worker."""
+        with self._cv:
+            return self._pending
+
+    def latest(self) -> Optional[EpochSnapshot]:
+        """Newest published epoch (``None`` before the first publish).
+        Never touches device state."""
+        return self._published
+
+    def refresh(self, *, force: bool = False) -> EpochSnapshot:
+        """Publish the current state as a new epoch if anything was
+        ingested since the last publish; otherwise return the published
+        epoch unchanged.
+
+        Materializes the coreset (device -> host) only when the
+        fingerprint moved; a ``force`` publish of an unchanged coreset
+        reuses the previous buffers and just advances the epoch counter
+        (the ``flush`` barrier uses this so its returned epoch provably
+        covers everything ingested before it). Without ``force``, an
+        unchanged-coreset ingest does not bump the epoch — the published
+        snapshot already serves it.
+        """
+        with self._cv:
+            if self._state is None:
+                raise RuntimeError("ingest at least one batch first")
+            pub = self._published
+            changed = pub is None or pub.fingerprint != self._fingerprint
+            if not self._dirty and not changed:
+                return pub
+            if not changed and not force:
+                return pub
+            now = time.monotonic()
+            if changed:
+                pts, cats, src = compact_coreset(
+                    snapshot_at_epoch(self._state)
+                )
+                self.snapshot_materializations += 1
+            else:  # forced epoch bump over an unchanged coreset
+                pts, cats, src = pub.points, pub.cats, pub.src_idx
+            snap = EpochSnapshot(
+                epoch=(pub.epoch if pub else 0) + 1,
+                fingerprint=self._fingerprint,
+                points=pts,
+                cats=cats,
+                src_idx=src,
+                n_offered=self.n_offered,
+                published_at=now,
+            )
+            self._published = snap
+            self._dirty = False
+            self._unpublished = 0
+            self.epochs_published += 1
+            self._cv.notify_all()
+        if self.on_publish is not None:
+            self.on_publish(snap)
+        return snap
+
+    def acquire(
+        self,
+        min_epoch: Optional[int] = None,
+        *,
+        timeout: Optional[float] = 60.0,
+    ) -> EpochSnapshot:
+        """Snapshot for a reader: stale-but-consistent while ingestion is
+        in flight, freshest-available when the runtime is idle.
+
+        With async batches pending, returns the newest *published* epoch
+        without touching device state — or the runtime lock: the stale
+        read path is entirely lock-free, so a query never queues behind
+        the scan call the worker is inside. When idle, publishes any
+        unpublished synchronous ingests first — so the façade's
+        sequential ingest-then-query flow always sees its own writes.
+        ``min_epoch`` blocks until an epoch >= it is published; if
+        nothing in flight can ever satisfy it, raises ``ValueError`` (and
+        ``TimeoutError`` after ``timeout`` seconds).
+        """
+        self._raise_worker_error()
+        snap = self._published  # single-ref read: atomic, no lock
+        if (
+            snap is not None
+            and self._pending > 0
+            and (min_epoch is None or snap.epoch >= min_epoch)
+        ):
+            return snap
+        with self._cv:
+            self._raise_worker_error()
+            if self._pending == 0:
+                snap = self.refresh()
+            else:
+                snap = self._published
+                if snap is None:
+                    # first batches still in flight: wait for epoch 1
+                    self._wait_for(1, timeout)
+                    snap = self._published
+            if min_epoch is not None and snap.epoch < min_epoch:
+                self._wait_for(min_epoch, timeout)
+                snap = self._published
+            return snap
+
+    def _wait_for(self, min_epoch: int, timeout: Optional[float]) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while self._published is None or self._published.epoch < min_epoch:
+            self._raise_worker_error()
+            if self._pending == 0:
+                # nothing in flight can advance the epoch: force at most
+                # one publish, then the request is provably unsatisfiable
+                snap = self.refresh(force=True)
+                if snap.epoch >= min_epoch:
+                    return
+                raise ValueError(
+                    f"min_epoch {min_epoch} is ahead of the newest epoch "
+                    f"{snap.epoch} and no ingestion is in flight"
+                )
+            remaining = (
+                None if deadline is None else deadline - time.monotonic()
+            )
+            if remaining is not None and remaining <= 0:
+                raise TimeoutError(
+                    f"epoch {min_epoch} not published within timeout"
+                )
+            self._cv.wait(remaining)
+
+    # ------------------------------------------------------------------
+    # async ingestion
+    # ------------------------------------------------------------------
+
+    def submit(
+        self, points: np.ndarray, cats: Optional[np.ndarray] = None
+    ) -> None:
+        """Enqueue one batch for background ingestion and return without
+        waiting for the scan. Batches are ingested strictly in submission
+        order (one worker), so the resulting stream — and therefore every
+        published epoch — is bit-identical to the same sequence of
+        synchronous ``ingest`` calls. Blocks only when ``max_pending``
+        batches are already queued (backpressure). Worker errors surface
+        on the next ``submit``/``flush``.
+        """
+        pts = np.asarray(points, np.float32)
+        with self._cv:
+            self._raise_worker_error()
+            if self._closed:
+                raise RuntimeError("runtime is closed")
+            if self._worker is None:
+                self._worker = threading.Thread(
+                    target=self._worker_loop,
+                    name="stream-runtime-ingest",
+                    daemon=True,
+                )
+                self._worker.start()
+            self._pending += 1
+        self._queue.put((pts, cats))
+
+    def _drop_pending_item(self, err: BaseException) -> None:
+        with self._cv:
+            if self._worker_err is None:
+                self._worker_err = err
+            self._pending -= 1
+            self._cv.notify_all()
+
+    def _worker_loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is _STOP:
+                # drain any batch that raced a concurrent close() past the
+                # sentinel: it will never be ingested — record that and
+                # unblock flush() waiters instead of hanging them
+                while True:
+                    try:
+                        nxt = self._queue.get(timeout=0.1)
+                    except queue.Empty:
+                        return
+                    if nxt is not _STOP:
+                        self._drop_pending_item(RuntimeError(
+                            "batch submitted concurrently with close() "
+                            "was dropped"
+                        ))
+            pts, cats = item
+            if self._worker_err is not None:
+                # after a failed batch the stream truncates there: later
+                # batches are dropped (not ingested out of order), so the
+                # error surfaced to callers tells the truth — everything
+                # after the failure needs re-submitting
+                self._drop_pending_item(self._worker_err)
+                continue
+            try:
+                self.ingest(pts, cats)
+            except BaseException as e:  # noqa: BLE001 — surfaced to callers
+                self._drop_pending_item(e)
+                continue
+            with self._cv:
+                self._pending -= 1
+                drained = self._pending == 0
+                overdue = self._unpublished >= self.publish_every
+                self._cv.notify_all()
+            if drained or overdue:
+                # publish off the ingest lock's critical path: the epoch
+                # materialization (device pull) runs here, in the worker,
+                # never in a query thread
+                try:
+                    self.refresh(force=drained)
+                except BaseException as e:  # noqa: BLE001
+                    with self._cv:
+                        if self._worker_err is None:
+                            self._worker_err = e
+                        self._cv.notify_all()
+
+    def _raise_worker_error(self) -> None:
+        if self._worker_err is not None:
+            err = self._worker_err
+            raise RuntimeError(
+                "async ingest worker failed; no further batches were "
+                "ingested"
+            ) from err
+
+    def flush(self, *, timeout: Optional[float] = 120.0) -> int:
+        """Freshness barrier: wait until every batch submitted so far is
+        ingested, force-publish, and return the epoch number — which then
+        provably covers all of them (pass it as ``min_epoch`` to read
+        your own writes)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while self._pending > 0:
+                self._raise_worker_error()
+                remaining = (
+                    None if deadline is None else deadline - time.monotonic()
+                )
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError("flush timed out with batches pending")
+                self._cv.wait(remaining)
+            self._raise_worker_error()
+            return self.refresh(force=True).epoch
+
+    def close(self) -> None:
+        """Stop the async worker (idempotent). Synchronous ingestion and
+        published epochs remain usable; further ``submit`` calls raise."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            worker = self._worker
+        if worker is not None:
+            self._queue.put(_STOP)
+            worker.join(timeout=60.0)
+
+    def __enter__(self) -> "StreamRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,89 +1,62 @@
-"""Stateful online diversity service (ingestion + cached query answering).
+"""Stateful online diversity service — now a thin façade over the layered
+serving runtime (``StreamRuntime`` + ``QueryFrontend``).
 
 Serving state is exactly what the paper says to keep (§4.4, §5.2): the
-resumable streaming-scan state (``core.streaming.StreamState``) and the small
-(1-eps)-coreset it induces. Queries never touch the raw stream:
+resumable streaming-scan state (``core.streaming.StreamState``) and the
+small (1-eps)-coreset it induces. The layers split along the write/read
+seam:
 
-  ingest     resume the jit'd branchless blocked Alg.-2 scan over each
-             arriving batch (``ingest_batch_donated`` — the state is
-             reassigned every call, so its buffers are donated and a
-             steady-state batch pays no state copy), with global
-             ``src_idx`` bookkeeping; with ``num_shards > 1`` the stream
-             is partitioned across independent per-shard scan states whose
-             coresets compose by union (§3) under a ``placement`` drive:
-             row-granular round-robin through one vmapped call ("vmap") or
-             a shard_map mesh of per-device shard groups ("shard_map"),
-             or batch-granular round-robin over per-device states
-             ("pipeline" — each ingest is the unsharded executable);
-             ``placement="auto"`` resolves per backend/device count.
-             ``warmup()`` pre-compiles the bucketed scan/solver shapes so
-             first queries stop paying trace+compile;
-  cache      the compacted coreset + its pairwise distance matrix live in a
-             ``DistanceCache`` keyed by (MatroidSpec, tau, metric) and a
-             content fingerprint — ingestion that does not change the
-             coreset keeps the matrix warm;
-  query      answered on the cached matrix only, dispatched through the
-             ``core.solvers`` engine registry: ``engine="auto"`` (the
-             default for both ``query`` and ``query_batch``) partitions a
-             batch across the fastest eligible engines carrying the
-             host-parity guarantee — the vmapped batched sum solver for
-             uniform/partition/transversal matroids, the host final-stage
-             solvers (bit-identical selections to ``solve_dmmc``) for
-             everything else. ``engine=<name>`` forces one engine; a
-             query's ``engine_hint`` opts into non-parity engines like the
-             vmapped star/tree greedy ("jit_greedy").
+  StreamRuntime   owns the scan state across all placement drives
+                  (vmap/shard_map/pipeline), resumes the jit'd branchless
+                  blocked Alg.-2 scan per batch (donated buffers), tracks
+                  the coreset fingerprint with an O(1) device sync, and
+                  *publishes immutable epoch snapshots* — the coreset
+                  materialized once per epoch, not per call. Its async
+                  ``submit`` entry point decouples ingestion from the
+                  query path entirely (background worker + epoch cadence);
+  QueryFrontend   answers queries from published epochs only: per-tenant
+                  ``(MatroidSpec, tau, metric)``-keyed ``DistanceCache``
+                  entries over the shared stream, ``core.solvers``
+                  registry dispatch (``engine="auto"`` partitions batches
+                  across the fastest eligible host-parity engines), and
+                  the ``min_epoch``/``flush()`` freshness contract.
+
+``DiversityService`` wires one runtime to one frontend with one default
+tenant and keeps the historical single-tenant API bit-for-bit: ``ingest``
+is the runtime's synchronous path, ``query``/``query_batch`` resolve the
+newest epoch (publishing pending synchronous ingests first, so the
+sequential flow always sees its own writes), ``snapshot()`` returns the
+published epoch's buffers — an epoch-aware no-op when nothing changed.
+Multi-tenant and async serving are one attribute away:
+
+    svc = DiversityService(spec, k=10, tau=64, caps=caps)
+    svc.runtime.submit(batch, cats)              # non-blocking ingestion
+    svc.frontend.register_tenant("cos", metric="cosine")
+    svc.frontend.query(q, tenant="cos")          # same stream, own cache
+    e = svc.frontend.flush()                     # freshness barrier
+    svc.frontend.query(q, min_epoch=e)           # read your own writes
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import time
 from typing import Optional, Sequence
 
-import jax.numpy as jnp
 import numpy as np
 
-from ...core.solvers.jit_sum import bucket_pow2 as _bucket_pow2
-
-import jax
-
 from ...core import geometry
-from ...core.compose import compact_coreset, snapshot_shards, union_coresets
-from ...core.final_solve import SubsetMatroidView
-from ...core.matroid import MatroidSpec, make_host_matroid
-from ...core.solvers import (
-    SolveContext,
-    SolveSpec,
-    get_engine,
-    partition_by_engine,
-)
-from ...core.streaming import (
-    StreamState,
-    ingest_batch,
-    ingest_batch_donated,
-    ingest_batch_sharded,
-    ingest_batch_sharded_donated,
-    ingest_batch_sharded_mapped,
-    init_sharded_states,
-    init_stream_state,
-    resolve_placement,
-    snapshot_coreset,
-)
-from .cache import CacheKey, CoresetEntry, DistanceCache, coreset_fingerprint
-from .query import DiversityQuery, QueryResult, candidate_mask
+from ...core.matroid import MatroidSpec
+from .cache import DistanceCache
+from .frontend import QueryFrontend
+from .query import DiversityQuery, QueryResult
+from .runtime import EpochSnapshot, IngestReport, StreamRuntime
 
-
-@dataclasses.dataclass
-class IngestReport:
-    n: int  # points in this batch
-    total: int  # stream points offered so far
-    coreset_size: int
-    coreset_changed: bool
-    ingest_s: float
+__all__ = [
+    "DiversityService", "IngestReport", "EpochSnapshot",
+]
 
 
 class DiversityService:
-    """Online DMMC: incremental coreset ingestion + cached batched queries."""
+    """Online DMMC: incremental coreset ingestion + cached batched queries
+    (single-tenant façade over ``StreamRuntime`` + ``QueryFrontend``)."""
 
     def __init__(
         self,
@@ -103,22 +76,21 @@ class DiversityService:
         block_size: int = 128,
         placement: str = "auto",
     ):
-        if spec.kind == "general" and oracle is None:
-            raise ValueError("general matroid service needs a host oracle")
-        if spec.kind == "partition" and caps is None:
-            raise ValueError("partition matroid service needs per-category caps")
-        if num_shards < 1:
-            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
-        # resolves "auto" against jax.devices() once, at construction:
-        # shard_map when >1 device can take a whole shard, else the vmap
-        # drive (single-device fallback)
-        self.placement = resolve_placement(placement, num_shards)
+        self.runtime = StreamRuntime(
+            spec, k,
+            tau=tau, metric=metric, caps=caps, slot_cap=slot_cap,
+            variant=variant, eps=eps, c_const=c_const, oracle=oracle,
+            num_shards=num_shards, block_size=block_size,
+            placement=placement,
+        )
+        self.frontend = QueryFrontend(self.runtime, cache=cache)
+        self.cache = self.frontend.cache
+        self.cache_key = self.frontend.default_tenant.key
         self.spec = spec
         self.k = int(k)
         self.tau = int(tau)
         self.metric = metric
-        self.caps = None if caps is None else np.asarray(caps, np.int32)
-        self._caps_j = None if caps is None else jnp.asarray(caps, jnp.int32)
+        self.caps = self.runtime.caps
         self.slot_cap = slot_cap
         self.stream_variant = variant
         self.eps = float(eps)
@@ -126,60 +98,26 @@ class DiversityService:
         self.oracle = oracle
         self.num_shards = int(num_shards)
         self.block_size = int(block_size)
-        self.cache = cache if cache is not None else DistanceCache()
-        self.cache_key = CacheKey(spec=spec, tau=self.tau, metric=str(metric))
-        # single-shard state, stacked shard state (vmap/shard_map), or a
-        # list of per-shard states (pipeline)
-        self._state = None
-        self._gamma_width = max(spec.gamma, 1)
-        self.n_offered = 0
-        self._fingerprint: Optional[int] = None
-        self._rr = 0  # pipeline round-robin cursor (batch granularity)
-        # per-shard (valid, src) host pulls for the pipeline fingerprint:
-        # only the shard an ingest touched is re-pulled (entry set to None);
-        # the rest reuse their cached copy, so the per-ingest host-pull
-        # count stays O(1) instead of O(num_shards)
-        self._fp_cache: Optional[list] = None
+        self.placement = self.runtime.placement
 
     # ------------------------------------------------------------------
-    # ingestion
+    # ingestion (delegated to the runtime's synchronous path)
     # ------------------------------------------------------------------
 
     @property
     def state(self):
-        """The live scan state: a ``StreamState`` (single shard), a
-        stacked one (vmap/shard_map), or a list (pipeline).
+        """The live scan state (see ``StreamRuntime.state`` for the
+        donation caveat: the next ``ingest`` invalidates references
+        captured here)."""
+        return self.runtime.state
 
-        The ingest hot path *donates* this state's buffers to XLA (the
-        steady-state win of not copying the delegate store every batch),
-        so a reference captured here is invalidated by the next
-        ``ingest`` — read or copy (``jax.tree_util.tree_map(jnp.copy,
-        svc.state)``) anything you need to keep before ingesting again.
-        """
-        return self._state
+    @property
+    def n_offered(self) -> int:
+        return self.runtime.n_offered
 
-    def _check_cats(self, n: int, cats: Optional[np.ndarray]) -> np.ndarray:
-        if cats is None:
-            return np.zeros((n, self._gamma_width), np.int32)
-        cats_arr = np.asarray(cats, np.int32).reshape(n, -1)
-        if cats_arr.shape[1] != self._gamma_width:
-            raise ValueError(
-                f"cats width {cats_arr.shape[1]} != spec gamma "
-                f"{self._gamma_width}"
-            )
-        if (
-            self.spec.kind == "partition"
-            and cats_arr.shape[1] > 1
-            and np.any(cats_arr[:, 1:] >= 0)
-        ):
-            # refuse at the door rather than truncating labels inside the
-            # scan/solvers: a partition matroid is single-label by
-            # definition, multi-label points need a transversal spec
-            raise ValueError(
-                "partition service got a point with >1 category label; "
-                "use a transversal MatroidSpec for multi-label data"
-            )
-        return cats_arr
+    @property
+    def _fingerprint(self) -> Optional[int]:
+        return self.runtime.fingerprint
 
     def ingest(
         self,
@@ -188,62 +126,12 @@ class DiversityService:
         *,
         pad_to: Optional[int] = None,
     ) -> IngestReport:
-        """Feed one batch of the stream (any size) into the scan state.
-
-        With ``num_shards > 1`` the batch is dealt round-robin across the
-        per-shard scan states (``ingest_sharded``); otherwise it resumes the
-        single blocked scan. Either way batches are padded to a multiple of
-        ``block_size`` with invalid rows — a bit-exact no-op for the scan
-        that keeps the jit cache keyed on a handful of bucketed shapes
-        instead of recompiling for every ragged final batch. ``pad_to``
-        raises the padded length further (``warmup`` uses it to compile a
-        target batch shape off an empty batch).
-        """
-        if self.num_shards > 1:
-            if self.placement == "pipeline":
-                return self.ingest_pipeline(points, cats, pad_to=pad_to)
-            return self.ingest_sharded(points, cats, pad_to=pad_to)
-        t0 = time.perf_counter()
-        pts = np.asarray(points, np.float32)
-        n, d = pts.shape
-        cats_arr = self._check_cats(n, cats)
-        if self._state is None:
-            self._state = init_stream_state(
-                d, self._gamma_width, self.spec, self.k, self.tau,
-                slot_cap=self.slot_cap,
-            )
-        total = max(n, pad_to or 0)
-        pad = total + (-total % self.block_size) - n
-        if pad:
-            pts = np.concatenate([pts, np.zeros((pad, d), np.float32)])
-            cats_arr = np.concatenate(
-                [cats_arr, np.full((pad, self._gamma_width), -1, np.int32)]
-            )
-        valid = np.arange(n + pad) < n
-        pts_norm = geometry.normalize_for_metric(
-            jnp.asarray(pts, jnp.float32), self.metric
-        )
-        # donated: the previous state is dropped on reassignment, so XLA
-        # aliases its buffers into the new state instead of copying the
-        # whole delegate store every call (the dominant fixed cost of a
-        # steady-state no-op batch)
-        self._state = ingest_batch_donated(
-            self._state,
-            pts_norm,
-            jnp.asarray(cats_arr),
-            jnp.asarray(valid),
-            self.spec,
-            self._caps_j,
-            self.k,
-            self.tau,
-            base_index=jnp.int32(self.n_offered),
-            variant=self.stream_variant,
-            eps=self.eps,
-            c_const=self.c_const,
-            block_size=self.block_size,
-        )
-        self.n_offered += n
-        return self._report(n, t0)
+        """Feed one batch of the stream synchronously (resume the blocked
+        scan under the service's placement drive; see
+        ``StreamRuntime.ingest``). For ingestion that must not block the
+        caller, use ``svc.runtime.submit`` — same scan, same resulting
+        stream, background worker + published epochs."""
+        return self.runtime.ingest(points, cats, pad_to=pad_to)
 
     def ingest_sharded(
         self,
@@ -252,114 +140,9 @@ class DiversityService:
         *,
         pad_to: Optional[int] = None,
     ) -> IngestReport:
-        """Deal one batch round-robin across ``num_shards`` independent
-        scan states and ingest all shards in one call — the vmap drive on a
-        single device, the ``shard_map``-over-mesh drive when ``placement``
-        resolved to it (per-device shard groups run as real parallel
-        programs).
-
-        Each shard sees its own sub-stream; per §3 composability the union
-        of the per-shard coresets (``snapshot``) is a coreset of the full
-        stream. Global ``src_idx`` bookkeeping is preserved by passing
-        explicit per-row indices.
-        """
-        if self.num_shards < 2:
-            raise ValueError("ingest_sharded needs num_shards >= 2")
-        if self.placement == "pipeline":
-            # a pipeline service keeps a *list* of per-shard states; the
-            # stacked-state drives here would corrupt it — route through
-            # ingest()/ingest_pipeline, or construct with placement="vmap"
-            # or "shard_map" for the row-granular deal
-            raise ValueError(
-                "ingest_sharded is the row-granular drive; this service "
-                "resolved placement='pipeline' (batch-granular) — use "
-                "ingest()/ingest_pipeline, or pass placement='vmap' or "
-                "'shard_map'"
-            )
-        t0 = time.perf_counter()
-        pts = np.asarray(points, np.float32)
-        n, d = pts.shape
-        cats_arr = self._check_cats(n, cats)
-        S = self.num_shards
-        if self._state is None:
-            self._state = init_sharded_states(
-                S, d, self._gamma_width, self.spec, self.k, self.tau,
-                slot_cap=self.slot_cap,
-            )
-        if str(self.metric) == "euclidean":
-            pts_norm = pts  # identity metric: skip the device round-trip
-        else:
-            pts_norm = np.asarray(
-                geometry.normalize_for_metric(
-                    jnp.asarray(pts, jnp.float32), self.metric
-                )
-            )
-        # per-shard sub-batch length, bucketed so ragged batches reuse a
-        # handful of jit shapes; the per-shard block never exceeds it (a
-        # 512-point deal across 8 shards is ONE 64-point block per shard,
-        # not a 64-point block padded to 128)
-        mm0 = -(-max(n, pad_to or 0) // S)
-        sb = min(self.block_size, _bucket_pow2(mm0))
-        mm = mm0 + (-mm0 % sb)
-        Pb = np.zeros((S, mm, d), np.float32)
-        Cb = np.full((S, mm, self._gamma_width), -1, np.int32)
-        Vb = np.zeros((S, mm), bool)
-        Sb = np.full((S, mm), -1, np.int32)
-        if n > 0 and n % S == 0:
-            # whole deal in three O(n) reshapes: round-robin row r of the
-            # batch lands at [r % S, r // S]
-            q = n // S
-            Pb[:, :q] = pts_norm.reshape(q, S, d).transpose(1, 0, 2)
-            Cb[:, :q] = cats_arr.reshape(q, S, -1).transpose(1, 0, 2)
-            Vb[:, :q] = True
-            Sb[:, :q] = (
-                self.n_offered
-                + np.arange(n, dtype=np.int64).reshape(q, S).T
-            )
-        else:
-            for s in range(S):
-                rows = np.arange(s, n, S)
-                r = rows.shape[0]
-                Pb[s, :r] = pts_norm[rows]
-                Cb[s, :r] = cats_arr[rows]
-                Vb[s, :r] = True
-                Sb[s, :r] = self.n_offered + rows
-        ingest = (
-            ingest_batch_sharded_donated
-            if self.placement == "vmap"
-            else functools.partial(ingest_batch_sharded_mapped, donate=True)
-        )
-        self._state = ingest(
-            self._state,
-            jnp.asarray(Pb),
-            jnp.asarray(Cb),
-            jnp.asarray(Vb),
-            jnp.asarray(Sb),
-            self.spec,
-            self._caps_j,
-            self.k,
-            self.tau,
-            variant=self.stream_variant,
-            eps=self.eps,
-            c_const=self.c_const,
-            block_size=sb,
-        )
-        self.n_offered += n
-        return self._report(n, t0)
-
-    def _init_pipeline_states(self, d: int) -> None:
-        devs = jax.devices()
-        nd = len(devs)
-        self._state = [
-            jax.device_put(
-                init_stream_state(
-                    d, self._gamma_width, self.spec, self.k, self.tau,
-                    slot_cap=self.slot_cap,
-                ),
-                devs[i % nd],
-            )
-            for i in range(self.num_shards)
-        ]
+        """Row-granular sharded deal (vmap/shard_map drives); see
+        ``StreamRuntime.ingest_sharded``."""
+        return self.runtime.ingest_sharded(points, cats, pad_to=pad_to)
 
     def ingest_pipeline(
         self,
@@ -368,60 +151,9 @@ class DiversityService:
         *,
         pad_to: Optional[int] = None,
     ) -> IngestReport:
-        """Route one whole batch to the next shard (batch-granular
-        round-robin) and resume that shard's plain blocked scan.
-
-        The stream partition is by batches instead of rows — still a
-        partition, so §3 union composability is untouched — and each
-        ingest is the *same* jit executable as the unsharded path: per
-        batch, sharding costs nothing. Shard states are pinned round-robin
-        across ``jax.devices()``, so consecutive batches land on different
-        devices and async dispatch can overlap them when the hardware has
-        more than one. Callers that feed a few huge batches (rather than a
-        stream of them) should prefer the row-granular drives, which
-        spread every batch across all shards.
-        """
-        if self.num_shards < 2:
-            raise ValueError("ingest_pipeline needs num_shards >= 2")
-        t0 = time.perf_counter()
-        pts = np.asarray(points, np.float32)
-        n, d = pts.shape
-        cats_arr = self._check_cats(n, cats)
-        if self._state is None:
-            self._init_pipeline_states(d)
-        total = max(n, pad_to or 0)
-        pad = total + (-total % self.block_size) - n
-        if pad:
-            pts = np.concatenate([pts, np.zeros((pad, d), np.float32)])
-            cats_arr = np.concatenate(
-                [cats_arr, np.full((pad, self._gamma_width), -1, np.int32)]
-            )
-        valid = np.arange(n + pad) < n
-        pts_norm = geometry.normalize_for_metric(
-            jnp.asarray(pts, jnp.float32), self.metric
-        )
-        i = self._rr % self.num_shards
-        if n > 0:  # empty (warmup) batches don't consume a shard slot
-            self._rr += 1
-        if self._fp_cache is not None:
-            self._fp_cache[i] = None  # this shard's pull is now stale
-        self._state[i] = ingest_batch_donated(
-            self._state[i],
-            pts_norm,
-            jnp.asarray(cats_arr),
-            jnp.asarray(valid),
-            self.spec,
-            self._caps_j,
-            self.k,
-            self.tau,
-            base_index=jnp.int32(self.n_offered),
-            variant=self.stream_variant,
-            eps=self.eps,
-            c_const=self.c_const,
-            block_size=self.block_size,
-        )
-        self.n_offered += n
-        return self._report(n, t0)
+        """Batch-granular round-robin deal (pipeline placement); see
+        ``StreamRuntime.ingest_pipeline``."""
+        return self.runtime.ingest_pipeline(points, cats, pad_to=pad_to)
 
     def warmup(
         self,
@@ -453,35 +185,17 @@ class DiversityService:
 
         Returns ``{label: seconds}`` per warmed shape.
         """
+        import time
+
         report: dict = {}
         if d is None:
-            if self._state is None:
+            d = self.runtime.point_dim()
+            if d is None:
                 raise ValueError(
                     "warmup() before the first ingest needs the point "
                     "dimension: warmup(d=...)"
                 )
-            x1 = (
-                self._state[0].x1
-                if isinstance(self._state, list)
-                else self._state.x1
-            )
-            d = int(x1.shape[-1])
-        if self._state is None:
-            if self.num_shards > 1 and self.placement == "pipeline":
-                self._init_pipeline_states(d)
-            elif self.num_shards > 1:
-                self._state = init_sharded_states(
-                    self.num_shards, d, self._gamma_width, self.spec,
-                    self.k, self.tau, slot_cap=self.slot_cap,
-                )
-            else:
-                self._state = init_stream_state(
-                    d, self._gamma_width, self.spec, self.k, self.tau,
-                    slot_cap=self.slot_cap,
-                )
-            # the empty state has an empty coreset: fingerprint it so a
-            # zero-ingest warmup leaves the service in a consistent state
-            self._fingerprint, _ = self._fingerprint_and_size()
+        self.runtime.ensure_state(d)
         for size in dict.fromkeys(
             int(s) for s in (*ingest_sizes, self.block_size)
         ):
@@ -507,120 +221,22 @@ class DiversityService:
                     )
         return report
 
-    def _report(self, n: int, t0: float) -> IngestReport:
-        fp, size = self._fingerprint_and_size()
-        changed = fp != self._fingerprint
-        self._fingerprint = fp
-        return IngestReport(
-            n=n,
-            total=self.n_offered,
-            coreset_size=size,
-            coreset_changed=changed,
-            ingest_s=time.perf_counter() - t0,
-        )
-
-    def _fingerprint_and_size(self) -> tuple[int, int]:
-        """Coreset fingerprint straight from the raw state buffers.
-
-        The coreset is determined by (per-center validity, delegate validity,
-        delegate src ids); hashing those three small host pulls avoids the
-        eager ``snapshot_coreset`` graph on every ingest — the hot serving
-        path. Row order matches ``snapshot``/``snapshot_shards``, and for a
-        single shard the value is identical to the old snapshot-based hash.
-        """
-        def pull(st):
-            dv = np.asarray(st.dv)
-            cv = np.asarray(st.cvalid)
-            ds = np.asarray(st.ds)
-            valid = dv & cv[..., None]
-            src = ds[valid].astype(np.int64)
-            return coreset_fingerprint(valid.reshape(-1), src), int(
-                src.shape[0]
-            )
-
-        if isinstance(self._state, list):
-            if self._fp_cache is None:
-                self._fp_cache = [None] * len(self._state)
-            for j, st in enumerate(self._state):
-                if self._fp_cache[j] is None:
-                    self._fp_cache[j] = pull(st)
-            # the union is determined by the shard-major sequence of shard
-            # coresets, so hashing the per-shard hashes is an equivalent
-            # content key
-            return (
-                hash(tuple(fp for fp, _sz in self._fp_cache)),
-                int(sum(sz for _fp, sz in self._fp_cache)),
-            )
-        return pull(self._state)
-
     def snapshot(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Compacted current coreset (points, cats, src_idx), buffer order —
         identical row order to ``solve_dmmc(..., setting='streaming')`` for a
-        single shard; the shard-major union (§3) when sharded."""
-        if self._state is None:
-            raise RuntimeError("ingest at least one batch first")
-        if isinstance(self._state, list):  # pipeline: per-shard states
-            cs = union_coresets(
-                [snapshot_coreset(s) for s in self._state]
-            )
-        elif self.num_shards > 1:
-            cs = snapshot_shards(self._state)
-        else:
-            cs = snapshot_coreset(self._state)
-        return compact_coreset(cs)
+        single shard; the shard-major union (§3) when sharded.
+
+        Epoch-aware: reads the published ``EpochSnapshot`` (publishing any
+        pending synchronous ingest first) and materializes the buffers only
+        when the coreset actually changed — repeated calls on an unchanged
+        stream return the same host arrays without touching device state.
+        """
+        snap = self.runtime.refresh()
+        return snap.points, snap.cats, snap.src_idx
 
     # ------------------------------------------------------------------
-    # cached distance matrix
+    # queries (delegated to the frontend's default tenant)
     # ------------------------------------------------------------------
-
-    def _entry(self) -> tuple[CoresetEntry, bool]:
-        """Current cache entry (building the matrix only if the coreset
-        changed since it was last built). Returns (entry, was_cached)."""
-        if self._fingerprint is None:
-            raise RuntimeError("ingest at least one batch first")
-        e = self.cache.lookup(self.cache_key, self._fingerprint)
-        if e is not None:
-            return e, True
-        pts_c, cats_c, src_c = self.snapshot()
-        e = self.cache.build(
-            self.cache_key, pts_c, cats_c, src_c, self._fingerprint
-        )
-        return e, False
-
-    # ------------------------------------------------------------------
-    # queries
-    # ------------------------------------------------------------------
-
-    def _host_matroid(self, entry: CoresetEntry, spec: SolveSpec):
-        m = entry.size
-        if self.spec.kind == "general":
-            base = make_host_matroid(
-                self.spec, None, None, self.n_offered, spec.k, self.oracle
-            )
-            return SubsetMatroidView(base, entry.src_idx)
-        caps = (
-            self.caps if spec.caps is None else np.asarray(spec.caps, np.int32)
-        )
-        return make_host_matroid(self.spec, entry.cats, caps, m, spec.k)
-
-    def _solve_context(self, entry: CoresetEntry) -> SolveContext:
-        """Registry view of one cache entry (what every engine solves on)."""
-        return SolveContext(
-            D=entry.D,
-            spec=self.spec,
-            cats=entry.cats,
-            caps=self.caps,
-            matroid_fn=lambda spec: self._host_matroid(entry, spec),
-        )
-
-    def _solve_spec(self, entry: CoresetEntry, q: DiversityQuery) -> SolveSpec:
-        return SolveSpec(
-            k=q.k,
-            variant=q.variant,
-            gamma=q.gamma,
-            caps=q.caps,
-            allow=candidate_mask(entry.cats, q.allowed_cats),
-        )
 
     def query(self, q: DiversityQuery, *, engine: str = "auto") -> QueryResult:
         """Answer one query on the cached coreset matrix.
@@ -633,49 +249,16 @@ class DiversityService:
         (bit-identical selection order to the offline driver); any
         registered engine name forces that engine.
         """
-        return self.query_batch([q], engine=engine)[0]
+        return self.frontend.query(q, engine=engine)
 
     def query_batch(
         self, queries: Sequence[DiversityQuery], *, engine: str = "auto"
     ) -> list[QueryResult]:
-        """Answer a batch of heterogeneous queries against ONE cache entry.
+        """Answer a batch of heterogeneous queries against ONE cache entry
+        (see ``QueryFrontend.query_batch`` for the engine semantics; the
+        façade always queries the default tenant at the newest epoch)."""
+        return self.frontend.query_batch(queries, engine=engine)
 
-        ``engine="auto"`` partitions the batch across registry engines:
-        each query goes to the fastest eligible engine carrying the
-        host-parity guarantee (sum under uniform/partition/transversal ->
-        the vmapped batched solver; everything else -> the host reference
-        solvers), honoring per-query ``engine_hint`` opt-ins (e.g.
-        "jit_greedy" for approximate star/tree). Any other name forces
-        every query through that engine, raising if one is ineligible
-        ("vmap" is accepted as a legacy alias of "jit_sum"). The distance
-        matrix is fetched (and possibly built) exactly once per batch.
-        """
-        queries = list(queries)
-        if not queries:
-            return []
-        entry, cached = self._entry()
-        ctx = self._solve_context(entry)
-        specs = [self._solve_spec(entry, q) for q in queries]
-        groups = partition_by_engine(
-            ctx,
-            specs,
-            engine=engine,
-            hints=[q.engine_hint for q in queries],
-        )
-        results: list[Optional[QueryResult]] = [None] * len(queries)
-        for name, idxs in groups.items():
-            eng = get_engine(name)
-            for i, sol in zip(
-                idxs, eng.solve_batch(ctx, [specs[i] for i in idxs])
-            ):
-                loc = np.asarray(sol.local_indices, np.int64)
-                results[i] = QueryResult(
-                    indices=entry.src_idx[loc],
-                    local_indices=loc,
-                    diversity=sol.value,
-                    variant=queries[i].variant,
-                    engine=sol.engine,
-                    coreset_size=entry.size,
-                    from_cache=cached,
-                )
-        return results  # type: ignore[return-value]
+    def close(self) -> None:
+        """Stop the runtime's async worker, if one was started."""
+        self.runtime.close()

@@ -91,6 +91,35 @@ def test_unbounded_by_default_and_validation():
         DistanceCache(max_entries=0)
 
 
+def test_sweep_is_lazy_deadline_gated():
+    """The full expiry scan runs only once the earliest possible expiry
+    deadline has passed — a busy cache with nothing expiring never pays a
+    full sweep per insert (satellite: no sweep on every operation)."""
+    clock = FakeClock()
+    cache = DistanceCache(
+        build_fn=lambda p: np.zeros((p.shape[0],) * 2, np.float32),
+        ttl_s=100.0, clock=clock,
+    )
+    for i in range(20):  # 20 inserts well inside the TTL window
+        clock.t = float(i)
+        _build(cache, _key(i))
+        cache.lookup(_key(i), 0)
+    assert cache.stats.sweeps == 0, "swept before anything could expire"
+    clock.t = 150.0  # past the earliest deadline: the next insert sweeps
+    _build(cache, _key(99))
+    assert cache.stats.sweeps == 1
+    assert cache.stats.expirations == 20
+    assert len(cache) == 1
+    # a ttl-less cache never sweeps at all
+    plain = DistanceCache(
+        build_fn=lambda p: np.zeros((p.shape[0],) * 2, np.float32),
+        max_entries=2,
+    )
+    for i in range(5):
+        _build(plain, _key(i))
+    assert plain.stats.sweeps == 0 and plain.stats.evictions == 3
+
+
 def test_fingerprint_mismatch_still_invalidates():
     clock = FakeClock()
     cache = DistanceCache(

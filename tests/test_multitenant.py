@@ -1,0 +1,218 @@
+"""Multi-tenant cache churn over ONE stream: per-tenant fingerprint/entry
+isolation, LRU+TTL interplay under eviction pressure, and epoch
+publication invalidating exactly the affected entries."""
+import numpy as np
+import pytest
+
+from conftest import make_clustered_points
+from repro.core.matroid import MatroidSpec, PartitionMatroid
+from repro.serve.diversity import (
+    DistanceCache,
+    DiversityQuery,
+    QueryFrontend,
+    StreamRuntime,
+)
+
+
+def _instance(rng, n=400, h=4, k=4):
+    P = make_clustered_points(rng, n=n)
+    cats = rng.integers(0, h, (n, 1)).astype(np.int32)
+    caps = np.full(h, 2, np.int32)
+    spec = MatroidSpec("partition", num_categories=h, gamma=1)
+    return P, cats, caps, spec, k
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _four_tenants(fe, caps):
+    """default partition/euclidean + three more keys over the one stream:
+    mixed metrics, taus, and matroid views."""
+    return [
+        fe.default_tenant,
+        fe.register_tenant("cosine", metric="cosine"),
+        fe.register_tenant("tau-hi", tau=fe.runtime.tau * 2),
+        fe.register_tenant("uniform", spec=MatroidSpec("uniform")),
+    ]
+
+
+def test_tenant_fanout_isolated_entries_one_stream(rng):
+    P, cats, caps, spec, k = _instance(rng)
+    rt = StreamRuntime(spec, k, tau=12, caps=caps)
+    fe = QueryFrontend(rt)
+    tenants = _four_tenants(fe, caps)
+    rt.ingest(P, cats)
+    res = {t.name: fe.query(DiversityQuery(k=k), tenant=t.name)
+           for t in tenants}
+    # one stream, one epoch, four private entries — one build per key
+    assert len({t.key for t in tenants}) == 4
+    assert len(fe.cache) == 4
+    assert fe.cache.stats.builds == 4
+    epochs = {r.epoch for r in res.values()}
+    assert len(epochs) == 1, "all tenants read the same published epoch"
+    assert {r.tenant for r in res.values()} == {t.name for t in tenants}
+    # per-tenant isolation: same coreset rows, but the cosine tenant's
+    # entry holds re-normalized points (and so a different matrix)
+    e_def = fe.cache.lookup(tenants[0].key, rt.fingerprint)
+    e_cos = fe.cache.lookup(tenants[1].key, rt.fingerprint)
+    assert np.array_equal(e_def.src_idx, e_cos.src_idx)
+    assert not np.allclose(e_def.points, e_cos.points)
+    norms = np.linalg.norm(e_cos.points, axis=1)
+    assert np.allclose(norms, 1.0, atol=1e-5)
+    # constraint isolation: partition tenants return independent sets, the
+    # uniform tenant is free of the caps
+    m = PartitionMatroid(cats[:, 0], caps)
+    assert m.is_independent(list(res["default"].indices))
+    assert res["uniform"].engine == "jit_sum"
+    # warm path: repeat queries hit, never rebuild
+    builds = fe.cache.stats.builds
+    for t in tenants:
+        fe.query(DiversityQuery(k=k), tenant=t.name)
+    assert fe.cache.stats.builds == builds
+    st = fe.stats()
+    assert st["cache"]["builds"] == builds
+    assert st["tenants"] == sorted(t.name for t in tenants)
+
+
+def test_identical_keys_share_one_entry(rng):
+    """Tenants that differ only in caps share the (spec, tau, metric) key
+    and therefore one matrix — fan-out dedup, caps stay per-query."""
+    P, cats, caps, spec, k = _instance(rng)
+    rt = StreamRuntime(spec, k, tau=12, caps=caps)
+    fe = QueryFrontend(rt)
+    tight = fe.register_tenant("tight", caps=np.ones_like(caps))
+    assert tight.key == fe.default_tenant.key
+    rt.ingest(P, cats)
+    r1 = fe.query(DiversityQuery(k=k))
+    r2 = fe.query(DiversityQuery(k=k), tenant="tight")
+    assert fe.cache.stats.builds == 1
+    got = cats[r2.indices, 0]
+    assert len(got) == len(set(got)), "tight tenant's caps=1 violated"
+    assert len(set(r1.indices.tolist())) == k
+
+
+def test_lru_ttl_interplay_under_eviction_pressure(rng):
+    """4 tenants through a max_entries=2 + TTL cache: round-robin churn
+    evicts LRU entries, answers stay correct, TTL expires survivors, and
+    under capacity pressure expired entries are reclaimed before live
+    ones are evicted."""
+    P, cats, caps, spec, k = _instance(rng)
+    clock = FakeClock()
+    cache = DistanceCache(max_entries=2, ttl_s=100.0, clock=clock)
+    rt = StreamRuntime(spec, k, tau=12, caps=caps)
+    fe = QueryFrontend(rt, cache=cache)
+    tenants = _four_tenants(fe, caps)
+    rt.ingest(P, cats)
+    baseline = {}
+    for r in range(3):  # churn: every visit under pressure misses+rebuilds
+        for t in tenants:
+            clock.t += 1.0
+            res = fe.query(DiversityQuery(k=k), tenant=t.name)
+            if r == 0:
+                baseline[t.name] = res
+            else:
+                assert sorted(res.indices.tolist()) == sorted(
+                    baseline[t.name].indices.tolist()
+                ), f"churned answer drifted for {t.name}"
+    assert len(cache) == 2
+    assert cache.stats.evictions >= 8  # 4 tenants x 3 rounds over 2 slots
+    assert cache.stats.builds >= 10
+    # TTL: age both survivors out; the next build sweeps them (lazily)
+    sweeps = cache.stats.sweeps
+    clock.t += 200.0
+    fe.query(DiversityQuery(k=k))
+    assert cache.stats.expirations >= 2
+    assert cache.stats.sweeps >= sweeps
+    assert len(cache) == 1
+    # capacity pressure prefers reclaiming expired entries over evicting
+    # live ones: with one live + one expired entry, a third build drops
+    # the expired one (expiration, not eviction)
+    clock.t += 1.0
+    fe.query(DiversityQuery(k=k), tenant="cosine")
+    assert len(cache) == 2
+    clock.t += 150.0  # both now expired
+    ev = cache.stats.evictions
+    fe.query(DiversityQuery(k=k), tenant="uniform")
+    assert cache.stats.evictions == ev, "evicted a reclaimable entry"
+    assert len(cache) == 1
+
+
+def test_epoch_publication_invalidates_exactly_affected_entries(rng):
+    """A changed epoch on stream A invalidates exactly A's tenants'
+    entries; tenants of an unrelated stream B sharing the same cache stay
+    warm."""
+    P, cats, caps, spec, k = _instance(rng, n=600)
+    cache = DistanceCache()
+    rt_a = StreamRuntime(spec, k, tau=12, caps=caps)
+    rt_b = StreamRuntime(spec, k, tau=8, caps=caps)  # distinct tau -> keys
+    fe_a = QueryFrontend(rt_a, cache=cache)
+    fe_b = QueryFrontend(rt_b, cache=cache)
+    fe_a.register_tenant("cosine", metric="cosine")
+    rt_a.ingest(P[:300], cats[:300])
+    rt_b.ingest(P[:300], cats[:300])
+    for fe, names in ((fe_a, ("default", "cosine")), (fe_b, ("default",))):
+        for name in names:
+            fe.query(DiversityQuery(k=k), tenant=name)
+    assert cache.stats.builds == 3
+    # grow stream A until its coreset actually changes (shifted copies
+    # force new centers if the tail alone didn't)
+    rep = rt_a.ingest(P[300:], cats[300:])
+    shift = 1
+    while not rep.coreset_changed and shift < 64:
+        rep = rt_a.ingest(P[:100] + 10.0 * shift, cats[:100])
+        shift *= 2
+    assert rep.coreset_changed
+    builds = cache.stats.builds
+    inval = cache.stats.invalidations
+    ra = fe_a.query(DiversityQuery(k=k))
+    ra2 = fe_a.query(DiversityQuery(k=k), tenant="cosine")
+    # exactly A's two tenant entries rebuilt (old fingerprints invalidated)
+    assert cache.stats.builds == builds + 2
+    assert cache.stats.invalidations == inval + 2
+    assert ra.epoch == ra2.epoch == rt_a.latest().epoch
+    # B's entry is untouched and still warm
+    hits = cache.stats.hits
+    rb = fe_b.query(DiversityQuery(k=k))
+    assert cache.stats.builds == builds + 2
+    assert cache.stats.hits == hits + 1
+    assert rb.from_cache
+
+
+def test_tenant_registry_admission_rules(rng):
+    P, cats, caps, spec, k = _instance(rng, n=100)
+    rt = StreamRuntime(spec, k, tau=8, caps=caps)
+    fe = QueryFrontend(rt)
+    # identical re-registration is a no-op, conflicting config raises
+    t = fe.register_tenant("cosine", metric="cosine")
+    assert fe.register_tenant("cosine", metric="cosine") is t
+    with pytest.raises(ValueError, match="different configuration"):
+        fe.register_tenant("cosine", metric="euclidean")
+    with pytest.raises(KeyError, match="unknown tenant"):
+        fe.query(DiversityQuery(k=k), tenant="nope")
+    # the same admission rules as a single-tenant service
+    with pytest.raises(ValueError, match="oracle"):
+        fe.register_tenant("gen", spec=MatroidSpec("general"))
+    # a partition tenant passing no caps inherits the runtime's ...
+    inh = fe.register_tenant("inherit", tau=99)
+    assert np.array_equal(inh.caps, rt.caps)
+    # ... but over a capless (uniform) stream it must bring its own
+    rt_u = StreamRuntime(MatroidSpec("uniform"), k, tau=8)
+    fe_u = QueryFrontend(rt_u)
+    with pytest.raises(ValueError, match="caps"):
+        fe_u.register_tenant(
+            "capless",
+            spec=MatroidSpec("partition", num_categories=4, gamma=1),
+        )
+    # metric derivability: a cosine-normalized stream cannot serve a
+    # euclidean tenant (raw geometry is gone) — refused at registration;
+    # the reverse (cosine tenant over a raw stream) is exact and allowed
+    rt_c = StreamRuntime(MatroidSpec("uniform"), k, tau=8, metric="cosine")
+    fe_c = QueryFrontend(rt_c)
+    with pytest.raises(ValueError, match="not\\s+derivable"):
+        fe_c.register_tenant("euc", metric="euclidean")
+    assert fe_c.register_tenant("cos2", metric="cosine").metric == "cosine"
