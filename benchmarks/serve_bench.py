@@ -46,6 +46,16 @@ cache fan-out from the single stream (per-tenant cached QPS vs the
 single-tenant baseline). ``--check`` gates the two machine-relative
 ratios everywhere: ``contention_p95_ratio <= 2.0`` and
 ``multi_tenant_min_ratio >= 0.8``.
+
+Observability (``repro.obs``): every run embeds the full metrics snapshot
+in the artifact (``metrics``), the recompile census keyed by compile
+region (``recompiles_by_key``), the warmed-window recompile count
+(``steady_state_recompiles`` — gated ``== 0`` by ``--check``: a measured
+round that compiles anything is not steady state), the enabled-vs-disabled
+registry cost (``obs_overhead`` — interleaved floors, target <= 3%), and
+drops a Chrome ``trace_event`` artifact (``BENCH_serve.trace.json``, open
+at chrome://tracing or ui.perfetto.dev) whose spans cover the full
+submit -> worker_ingest -> publish -> query -> solve path.
 """
 from __future__ import annotations
 
@@ -85,7 +95,7 @@ def default_num_shards() -> int:
 
 
 def _steady_ingest(
-    factories: dict, P, cats, n: int, batch: int
+    factories: dict, P, cats, n: int, batch: int, steady_watch=None
 ) -> tuple[dict, dict]:
     """Interleaved steady-state ingest floors: returns
     ``({config: points/s}, {config: the service that produced it})``.
@@ -95,10 +105,19 @@ def _steady_ingest(
     configs face the same host conditions and the recorded ratios are
     meaningful. The first WARM_ROUNDS passes compile and saturate (their
     times are discarded); the floor is min per-batch time afterwards.
+
+    ``steady_watch`` (an ``obs.RecompileWatch``) is reset at the
+    warm/measure boundary, so after return it holds exactly the XLA
+    compiles triggered *inside* the measured rounds — the
+    ``steady_state_recompiles == 0`` gate: a measured round that compiles
+    anything is not measuring steady state (and the watch's by-key census
+    names the bucketed shape that failed to hold).
     """
     svcs = {name: mk() for name, mk in factories.items()}
     best: dict = {name: [] for name in factories}
     for r in range(WARM_ROUNDS + MEASURE_ROUNDS):
+        if r == WARM_ROUNDS and steady_watch is not None:
+            steady_watch.reset()
         for off in range(0, n, batch):
             m = min(batch, n - off)
             # batch-granular interleave: every config ingests the same
@@ -270,8 +289,16 @@ def _mixed_workload(P, cats, caps, spec, k: int, tau: int, quick: bool,
 def _bench(quick: bool, num_shards: int | None = None) -> dict:
     import jax
 
+    from repro import obs
     from repro.core import solve_dmmc
     from repro.serve.diversity import DiversityQuery, DiversityService
+
+    # observability: start every bench run from zeroed metrics and an
+    # empty trace buffer so the embedded snapshot/trace describe THIS run
+    obs.reset()
+    census = obs.recompile_watch()  # never reset: the full-run census
+    steady = obs.RecompileWatch()  # windowed: warmed measurement gates
+    steady_total = 0  # compiles observed inside warmed measured windows
 
     n = 4000 if quick else 20000
     k, tau, batch = 8, 32, 512
@@ -292,7 +319,9 @@ def _bench(quick: bool, num_shards: int | None = None) -> dict:
         "sharded_shard_map": mk(num_shards=S, placement="shard_map"),
         "sharded_pipeline": mk(num_shards=S, placement="pipeline"),
     }
-    pps, svcs = _steady_ingest(factories, P, cats, n, batch)
+    pps, svcs = _steady_ingest(factories, P, cats, n, batch,
+                               steady_watch=steady)
+    steady_total += steady.total()
     svc = svcs["unsharded"]
     svc_sh = svcs["sharded_auto"]
     ingest_pps = pps["unsharded"]
@@ -322,11 +351,13 @@ def _bench(quick: bool, num_shards: int | None = None) -> dict:
 
     # warm single-query latency on the cached matrix (median of reps)
     reps = 9 if quick else 20
+    steady.reset()  # warm window: the shape/matrix are already compiled
     lat = []
     for _ in range(reps):
         t0 = time.perf_counter()
         res = svc.query(DiversityQuery(k=k))
         lat.append(time.perf_counter() - t0)
+    steady_total += steady.total()
     warm_s = float(np.median(lat))
     assert res.from_cache and svc.cache.stats.builds == 1
 
@@ -340,22 +371,27 @@ def _bench(quick: bool, num_shards: int | None = None) -> dict:
         for i in range(32)
     ]
     svc.query_batch(qs)  # compile the vmapped solver for this shape
+    steady.reset()
     b_lat = []
     for _ in range(reps):
         with Timer() as t_b:
             out = svc.query_batch(qs)
         b_lat.append(t_b.s)
+    steady_total += steady.total()
     assert svc.cache.stats.builds == 1, "batched path rebuilt the matrix"
     qps = len(out) / float(np.min(b_lat))
 
     # ---- per-engine batched QPS + eligibility mix (solver registry) ----
     def _batch_qps(svc_, qs_, engine_="auto", reps_=3):
+        nonlocal steady_total
         svc_.query_batch(qs_, engine=engine_)  # compile/warm this shape
+        steady.reset()  # the warm call above absorbed any compile
         lats = []
         for _ in range(reps_):
             with Timer() as t_:
                 got = svc_.query_batch(qs_, engine=engine_)
             lats.append(t_.s)
+        steady_total += steady.total()
         return len(got) / float(np.min(lats)), got
 
     def _mix(results) -> dict:
@@ -405,10 +441,52 @@ def _bench(quick: bool, num_shards: int | None = None) -> dict:
         startree_hint=_mix(out_st),
     )
 
+    # ---- obs overhead A/B: enabled vs disabled, interleaved floors ----
+    # same methodology as every other ratio here: alternate the registry
+    # switch per rep so both arms share the host weather, gate on floors.
+    # The service is saturated (5 full stream passes), so re-ingesting a
+    # seen batch is the steady-state no-op and the cache entry stays warm.
+    ob_reps = 40 if quick else 60
+    ing_ab = {True: [], False: []}
+    qry_ab = {True: [], False: []}
+    arm_order = (True, False)
+    for target, ab in ((svc.ingest, ing_ab), (None, qry_ab)):
+        for _ in range(ob_reps):
+            arm_order = arm_order[::-1]  # alternate: no ordering bias
+            for enabled in arm_order:
+                obs.set_enabled(enabled)
+                with Timer() as t_ab:
+                    if target is not None:
+                        target(P[:batch], cats[:batch])
+                    else:
+                        svc.query_batch(qs)
+                ab[enabled].append(t_ab.s)
+    obs.set_enabled(True)
+    obs_overhead = dict(
+        # (enabled floor / disabled floor) - 1: the fraction of warmed
+        # ingest / batched-query wall the metrics+span layer costs
+        ingest_overhead=float(
+            np.min(ing_ab[True]) / np.min(ing_ab[False]) - 1.0
+        ),
+        batched_qps_overhead=float(
+            np.min(qry_ab[True]) / np.min(qry_ab[False]) - 1.0
+        ),
+        reps=int(ob_reps),
+    )
+
     # concurrent ingest+query + multi-tenant fan-out (its own runtime so
     # the contention window doesn't perturb the services measured above)
     mixed = _mixed_workload(P, cats, caps, spec, k, tau, quick,
                             ingest_pps)
+
+    # drop the Chrome trace artifact LAST: the mixed-workload section is
+    # the one that produces every span kind (submit -> worker_ingest ->
+    # publish on the ingest side, query_batch -> ... -> solve ->
+    # device_sync on the read side), and the ring buffer keeps the newest
+    # spans under overload
+    trace_path = _JSON_PATH.replace(".json", ".trace.json")
+    obs.dump_trace(trace_path)
+    steady.close()
 
     speedup = t_cold.s / warm_s
     dev = jax.devices()[0]
@@ -451,6 +529,14 @@ def _bench(quick: bool, num_shards: int | None = None) -> dict:
         sharded_coreset_size=int(sharded_res.coreset_size),
         pdist_builds=int(svc.cache.stats.builds),
         cache_hits=int(svc.cache.stats.hits),
+        # observability artifacts: the full metrics snapshot of this run,
+        # the recompile census keyed by compile region (bucketed shape),
+        # and the warmed-window recompile count gated == 0 by --check
+        metrics=obs.metrics_snapshot(),
+        recompiles_by_key=census.by_key(),
+        steady_state_recompiles=int(steady_total),
+        obs_overhead=obs_overhead,
+        trace_path=os.path.basename(trace_path),
         ingest_batch=batch,
         block_size=BLOCK_SIZE,
         num_shards=S,
@@ -589,6 +675,47 @@ def check(tolerance: float = 0.2, quick: bool = True) -> int:
     else:  # the section must exist: its absence is itself a regression
         print("check: mixed_workload section missing -> REGRESSION")
         rc = 1
+    # steady-state recompile gate (machine-independent, gated everywhere):
+    # the warmed measurement windows must compile NOTHING — a recompile
+    # there means a jit cache key (bucketed shape, static arg) failed to
+    # hold, silently turning a microsecond path into a multi-second one
+    ssr = new.get("steady_state_recompiles")
+    ok = ssr == 0
+    print(f"check: steady_state_recompiles = {ssr} -> "
+          f"{'OK' if ok else 'RECOMPILE REGRESSION'}")
+    if not ok:
+        rc = 1
+        for key, cnt in sorted(new.get("recompiles_by_key", {}).items()):
+            print(f"check:   compile census: {key} x{cnt}")
+    # metrics-presence gate: the embedded snapshot must carry the serving
+    # story — nonzero ingest and query histograms, per-engine solve series
+    met = new.get("metrics", {})
+
+    def _hist_count(prefix: str) -> int:
+        return sum(
+            d.get("count") or 0
+            for key, d in met.items() if key.startswith(prefix)
+        )
+
+    ing_obs = _hist_count("serve.ingest.latency_s")
+    qry_obs = _hist_count("serve.query.latency_s")
+    solve_engines = sorted(
+        key for key, d in met.items()
+        if key.startswith("serve.solve.latency_s")
+        and "engine=" in key and (d.get("count") or 0) > 0
+    )
+    ok = ing_obs > 0 and qry_obs > 0 and bool(solve_engines)
+    print(f"check: metrics snapshot: ingest observations {ing_obs}, "
+          f"query observations {qry_obs}, per-engine solve series "
+          f"{len(solve_engines)} -> "
+          f"{'OK' if ok else 'METRICS MISSING'}")
+    if not ok:
+        rc = 1
+    ov = new.get("obs_overhead", {})
+    if ov:  # report-only: the ratio is noisy on shared hosts
+        print(f"check: obs_overhead: ingest "
+              f"{ov['ingest_overhead']:+.1%}, batched "
+              f"{ov['batched_qps_overhead']:+.1%} (target <= 3%)")
     # eligibility-mix gate (machine-independent): the jit engines must keep
     # covering their (variant x matroid) cells — a dispatch regression that
     # silently routes transversal or star/tree batches back to 100% host
@@ -654,6 +781,10 @@ def main(quick: bool = False, emit_json: bool = False,
         yield csv_line(f"serve_tenant_{name}", 1e6 / tqps,
                        f"qps={tqps:.0f} "
                        f"min_ratio={mw['multi_tenant_min_ratio']:.2f}")
+    yield csv_line("serve_obs_overhead", 0.0,
+                   f"ingest={r['obs_overhead']['ingest_overhead']:+.1%} "
+                   f"batched={r['obs_overhead']['batched_qps_overhead']:+.1%} "
+                   f"steady_recompiles={r['steady_state_recompiles']}")
     if mw["contention_p95_ratio"] > 2.0:
         yield csv_line("serve_CONTENTION_ABOVE_2X", 0.0,
                        f"{mw['contention_p95_ratio']:.2f}x")

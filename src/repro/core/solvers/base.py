@@ -34,6 +34,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from ... import obs
 from ..diversity import VARIANTS, Variant, diversity
 from ..matroid import Matroid, MatroidSpec
 
@@ -280,6 +281,11 @@ def partition_by_engine(
         else:
             e = resolve_engine(engine, ctx, s)
         groups.setdefault(e.name, []).append(i)
+    reg = obs.default_registry()
+    for name, idxs in groups.items():
+        reg.counter(
+            "solve.dispatch.requests", engine=name, requested=engine
+        ).inc(len(idxs))
     return groups
 
 

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ... import obs
 from ..diversity import Variant
 from .base import (
     EngineSolution,
@@ -222,9 +223,10 @@ def solve_sum_batch(
     """Batch of sum-DMMC queries on one matrix (uniform/partition).
     Returns (sel (B, kmax) local ids -1-padded, nsel (B,), div (B,))."""
     f = functools.partial(_solve_sum_one, kmax=kmax, max_sweeps=max_sweeps)
-    return jax.vmap(f, in_axes=(None, None, 0, 0, 0, 0))(
-        D, cats, caps, allow, ks, gammas
-    )
+    with jax.named_scope("solver/jit_sum"):
+        return jax.vmap(f, in_axes=(None, None, 0, 0, 0, 0))(
+            D, cats, caps, allow, ks, gammas
+        )
 
 
 # --------------------------------------------------------------------------
@@ -339,9 +341,10 @@ def solve_sum_batch_transversal(
     """Batch of sum-DMMC queries under ONE transversal matroid.
     Returns (sel (B, kmax) -1-padded, nsel (B,), div (B,))."""
     f = functools.partial(_solve_sum_one_tv, kmax=kmax, max_sweeps=max_sweeps)
-    return jax.vmap(f, in_axes=(None, None, 0, 0, 0))(
-        D, oh, allow, ks, gammas
-    )
+    with jax.named_scope("solver/jit_sum_tv"):
+        return jax.vmap(f, in_axes=(None, None, 0, 0, 0))(
+            D, oh, allow, ks, gammas
+        )
 
 
 # --------------------------------------------------------------------------
@@ -373,25 +376,31 @@ class JitSumBatchEngine(SolverEngine):
 
         if ctx.spec.kind == "transversal":
             oh = cats_onehot(ctx.cats, ctx.spec.num_categories)
-            sel, nsel, _div = solve_sum_batch_transversal(
-                jnp.asarray(ctx.D),
-                jnp.asarray(oh),
-                jnp.asarray(allow_b),
-                jnp.asarray(ks),
-                jnp.asarray(gammas),
-                kmax=kmax,
-            )
+            with obs.compile_region(
+                f"solve[jit_sum_tv B={Bb} kmax={kmax} m={ctx.size}]"
+            ):
+                sel, nsel, _div = solve_sum_batch_transversal(
+                    jnp.asarray(ctx.D),
+                    jnp.asarray(oh),
+                    jnp.asarray(allow_b),
+                    jnp.asarray(ks),
+                    jnp.asarray(gammas),
+                    kmax=kmax,
+                )
         else:
             cats1, caps_b = partition_arrays(ctx, specs, Bb)
-            sel, nsel, _div = solve_sum_batch(
-                jnp.asarray(ctx.D),
-                jnp.asarray(cats1),
-                jnp.asarray(caps_b),
-                jnp.asarray(allow_b),
-                jnp.asarray(ks),
-                jnp.asarray(gammas),
-                kmax=kmax,
-            )
+            with obs.compile_region(
+                f"solve[jit_sum B={Bb} kmax={kmax} m={ctx.size}]"
+            ):
+                sel, nsel, _div = solve_sum_batch(
+                    jnp.asarray(ctx.D),
+                    jnp.asarray(cats1),
+                    jnp.asarray(caps_b),
+                    jnp.asarray(allow_b),
+                    jnp.asarray(ks),
+                    jnp.asarray(gammas),
+                    kmax=kmax,
+                )
 
         sel, nsel = np.asarray(sel), np.asarray(nsel)
         out = []

@@ -441,17 +441,20 @@ def _epoch_stats_impl(st: StreamState):
     change astronomically unlikely. Accepts a single state or a stacked
     per-shard state (the reductions flatten every leading axis).
     """
-    valid = st.dv & st.cvalid[..., None]
-    vz = valid.reshape(-1)
-    src = jnp.where(vz, st.ds.reshape(-1).astype(jnp.uint32) + 1, 0)
-    pos = jnp.arange(vz.shape[0], dtype=jnp.uint32)
-    count = jnp.sum(jnp.sum(valid, axis=-1, dtype=jnp.int32))
-    h1 = jnp.sum(src * (pos * jnp.uint32(0x9E3779B1) | 1), dtype=jnp.uint32)
-    h2 = jnp.sum(
-        (src ^ (pos * jnp.uint32(0x85EBCA6B))) * jnp.uint32(0x27D4EB2F),
-        dtype=jnp.uint32,
-    )
-    return count, h1, h2
+    with jax.named_scope("dmmc/epoch_stats"):
+        valid = st.dv & st.cvalid[..., None]
+        vz = valid.reshape(-1)
+        src = jnp.where(vz, st.ds.reshape(-1).astype(jnp.uint32) + 1, 0)
+        pos = jnp.arange(vz.shape[0], dtype=jnp.uint32)
+        count = jnp.sum(jnp.sum(valid, axis=-1, dtype=jnp.int32))
+        h1 = jnp.sum(
+            src * (pos * jnp.uint32(0x9E3779B1) | 1), dtype=jnp.uint32
+        )
+        h2 = jnp.sum(
+            (src ^ (pos * jnp.uint32(0x85EBCA6B))) * jnp.uint32(0x27D4EB2F),
+            dtype=jnp.uint32,
+        )
+        return count, h1, h2
 
 
 # Not donated: it must observe the live serving state without consuming it
@@ -845,9 +848,10 @@ def _blocked_scan(step, spec: MatroidSpec, k: int, caps_arr, variant: str,
         # below — whose batched-while carry select would copy every state
         # buffer per iteration under vmap — is entered only when some
         # point actually needs a sequential replay
-        active0, forced0 = _block_precheck(
-            spec, k, caps_arr, variant, eps, c_const, st, xb, xcb, vb
-        )
+        with jax.named_scope("dmmc/precheck"):
+            active0, forced0 = _block_precheck(
+                spec, k, caps_arr, variant, eps, c_const, st, xb, xcb, vb
+            )
         excl0 = jnp.cumsum(vb.astype(jnp.int32)) - vb.astype(jnp.int32)
         any_act = jnp.any(active0 | (vb & (st.n_seen + excl0 < 2)))
         nv = jnp.sum(vb.astype(jnp.int32))
@@ -912,7 +916,8 @@ def _blocked_scan(step, spec: MatroidSpec, k: int, caps_arr, variant: str,
         st = _cond_once(any_act, run_block, st)
         return st, None
 
-    st, _ = jax.lax.scan(block_step, st0, (Pb, Cb, Sb, Vb))
+    with jax.named_scope("dmmc/blocked_scan"):
+        st, _ = jax.lax.scan(block_step, st0, (Pb, Cb, Sb, Vb))
     return st
 
 

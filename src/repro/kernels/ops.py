@@ -39,9 +39,10 @@ def _mode(force: Optional[str]) -> str:
 
 def pairwise_sqdist(x, y, *, force: Optional[str] = None):
     m = _mode(force)
-    if m == "ref":
-        return _ref.pairwise_sqdist(x, y)
-    return _pdist.pairwise_sqdist(x, y, interpret=(m == "interpret"))
+    with jax.named_scope("kernels/pairwise_sqdist"):
+        if m == "ref":
+            return _ref.pairwise_sqdist(x, y)
+        return _pdist.pairwise_sqdist(x, y, interpret=(m == "interpret"))
 
 
 def pairwise_dist(x, y, *, force: Optional[str] = None):
@@ -88,18 +89,20 @@ def center_precheck(block, centers, cvalid, *, force: Optional[str] = None):
     f = force or _FORCE
     m = f if f else ("pallas" if jax.default_backend() == "tpu" else "matmul")
     if m == "ref":
-        dmin, z, second, z2, third = _ref.center_precheck(
-            block, centers, cvalid
-        )
-        return dmin, z, second, z2, third, jnp.float32(0.0)
-    if m == "matmul":
-        dmin, z, second, z2, third = _ref.center_precheck_matmul(
-            block, centers, cvalid
-        )
-    else:
-        dmin, z, second, z2, third = _precheck.center_precheck_stats(
-            block, centers, cvalid, interpret=(m == "interpret")
-        )
+        with jax.named_scope("kernels/center_precheck"):
+            dmin, z, second, z2, third = _ref.center_precheck(
+                block, centers, cvalid
+            )
+            return dmin, z, second, z2, third, jnp.float32(0.0)
+    with jax.named_scope("kernels/center_precheck"):
+        if m == "matmul":
+            dmin, z, second, z2, third = _ref.center_precheck_matmul(
+                block, centers, cvalid
+            )
+        else:
+            dmin, z, second, z2, third = _precheck.center_precheck_stats(
+                block, centers, cvalid, interpret=(m == "interpret")
+            )
     # distance-space error bound from the squared-space cancellation bound
     # e2: |sqrt(a) - sqrt(b)| = |a - b| / (sqrt(a) + sqrt(b)), and every
     # center the tie test compares sits at d_mm >= dmin — so e2 / dmin

@@ -29,6 +29,7 @@ warm path" and to watch hit/miss/eviction/expiry rates per cache.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 import threading
 import time
@@ -36,6 +37,7 @@ from typing import Callable, NamedTuple, Optional
 
 import numpy as np
 
+from ... import obs
 from ...core.final_solve import coreset_distance_matrix
 from ...core.matroid import MatroidSpec
 
@@ -63,20 +65,59 @@ class CoresetEntry:
         return int(self.src_idx.shape[0])
 
 
-@dataclasses.dataclass
+# distinguishes co-existing DistanceCache instances in a shared registry:
+# each cache's counters live under their own cache=cN label, so a fresh
+# cache always starts its series at zero
+_cache_seq = itertools.count()
+
+
 class CacheStats:
-    hits: int = 0
-    misses: int = 0
-    builds: int = 0  # pdist matrix constructions (the expensive part)
-    invalidations: int = 0
-    evictions: int = 0  # max_entries LRU evictions
-    expirations: int = 0  # TTL expiries
-    sweeps: int = 0  # full expiry scans actually run (lazy: deadline-gated)
+    """Per-cache counters, backed by ``repro.obs`` registry series
+    (``serve.cache.<field>{cache=cN}``).
+
+    Back-compat surface is unchanged: ``stats.hits`` etc. read as plain
+    ints and ``snapshot()`` returns the same plain dict as the old
+    dataclass did — but the counts now also appear in the registry's
+    snapshot/JSONL exports alongside every other serving metric. Mutation
+    goes through ``incr`` (called under the cache's RLock; each registry
+    counter additionally takes its own lock, so the counts stay exact
+    even for future lock-free callers).
+    """
+
+    FIELDS = (
+        "hits",
+        "misses",
+        "builds",  # pdist matrix constructions (the expensive part)
+        "invalidations",
+        "evictions",  # max_entries LRU evictions
+        "expirations",  # TTL expiries
+        "sweeps",  # full expiry scans actually run (lazy: deadline-gated)
+    )
+
+    def __init__(
+        self, registry: Optional[obs.MetricsRegistry] = None, **labels
+    ):
+        reg = registry if registry is not None else obs.default_registry()
+        if "cache" not in labels:
+            labels["cache"] = f"c{next(_cache_seq)}"
+        self._counters = {
+            f: reg.counter(f"serve.cache.{f}", **labels)
+            for f in self.FIELDS
+        }
+
+    def incr(self, field: str, n: int = 1) -> None:
+        self._counters[field].inc(n)
+
+    def __getattr__(self, name: str) -> int:
+        c = self.__dict__.get("_counters", {}).get(name)
+        if c is None:
+            raise AttributeError(name)
+        return c.value
 
     def snapshot(self) -> dict:
         """Plain-dict copy (what ``QueryFrontend.stats()``/serve_bench
         record — counters keep mutating underneath)."""
-        return dataclasses.asdict(self)
+        return {f: c.value for f, c in self._counters.items()}
 
 
 def coreset_fingerprint(valid: np.ndarray, src_idx: np.ndarray) -> int:
@@ -101,6 +142,7 @@ class DistanceCache:
         max_entries: Optional[int] = None,
         ttl_s: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
+        registry: Optional[obs.MetricsRegistry] = None,
     ):
         if max_entries is not None and max_entries < 1:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
@@ -113,7 +155,7 @@ class DistanceCache:
         # earliest instant at which *any* entry can expire: a full sweep
         # before this is provably a no-op, so inserts skip it (lazy sweep)
         self._next_sweep = math.inf
-        self.stats = CacheStats()
+        self.stats = CacheStats(registry)
 
     def _expired(self, e: CoresetEntry) -> bool:
         return (
@@ -132,10 +174,10 @@ class DistanceCache:
         """
         if self.ttl_s is None:
             return
-        self.stats.sweeps += 1
+        self.stats.incr("sweeps")
         for k in [k for k, e in self._entries.items() if self._expired(e)]:
             del self._entries[k]
-            self.stats.expirations += 1
+            self.stats.incr("expirations")
         self._next_sweep = (
             min(e.built_at for e in self._entries.values()) + self.ttl_s
             if self._entries
@@ -146,17 +188,17 @@ class DistanceCache:
         with self._mu:
             e = self._entries.get(key)
             if e is not None and self._expired(e):
-                self.stats.expirations += 1
+                self.stats.incr("expirations")
                 del self._entries[key]
                 e = None
             if e is not None and e.fingerprint == fingerprint:
-                self.stats.hits += 1
+                self.stats.incr("hits")
                 e.last_use = self._clock()
                 return e
             if e is not None:
-                self.stats.invalidations += 1
+                self.stats.incr("invalidations")
                 del self._entries[key]
-            self.stats.misses += 1
+            self.stats.incr("misses")
             return None
 
     def build(
@@ -174,7 +216,7 @@ class DistanceCache:
         # matrix) and honest (both builds counted).
         D = self._build_fn(points)
         with self._mu:
-            self.stats.builds += 1
+            self.stats.incr("builds")
             now = self._clock()
             if now >= self._next_sweep:
                 self._sweep_expired()
@@ -195,14 +237,14 @@ class DistanceCache:
                         self._entries, key=lambda k: self._entries[k].last_use
                     )
                     del self._entries[lru]
-                    self.stats.evictions += 1
+                    self.stats.incr("evictions")
             return e
 
     def invalidate(self, key: CacheKey) -> None:
         with self._mu:
             if key in self._entries:
                 del self._entries[key]
-                self.stats.invalidations += 1
+                self.stats.incr("invalidations")
 
     def __len__(self) -> int:
         return len(self._entries)

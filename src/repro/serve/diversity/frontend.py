@@ -29,11 +29,13 @@ ingests; the cache serializes entry builds internally.
 """
 from __future__ import annotations
 
+import time
 from typing import Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
+from ... import obs
 from ...core import geometry
 from ...core.final_solve import SubsetMatroidView
 from ...core.matroid import MatroidSpec, make_host_matroid
@@ -58,11 +60,19 @@ class QueryFrontend:
         *,
         cache: Optional[DistanceCache] = None,
         default_tenant: str = DEFAULT_TENANT,
+        registry: Optional[obs.MetricsRegistry] = None,
     ):
         self.runtime = runtime
-        self.cache = cache if cache is not None else DistanceCache()
+        # default to the runtime's registry so one serving stack counts in
+        # one place (tests pass explicit registries to count in isolation)
+        self.registry = registry if registry is not None else runtime.registry
+        self.cache = cache if cache is not None else DistanceCache(
+            registry=self.registry
+        )
         self.tenants = TenantRegistry()
         self.default_tenant = self.register_tenant(default_tenant)
+        reg = self.registry
+        self._m_epoch_wait_s = reg.histogram("serve.query.epoch_wait_s")
 
     # ------------------------------------------------------------------
     # tenants
@@ -231,35 +241,80 @@ class QueryFrontend:
         queries = list(queries)
         if not queries:
             return []
-        t = self._resolve_tenant(tenant)
-        snap = self.runtime.acquire(min_epoch)
-        entry, cached = self._entry(t, snap)
-        ctx = self._solve_context(t, snap, entry)
-        specs = [self._solve_spec(entry, q) for q in queries]
-        groups = partition_by_engine(
-            ctx,
-            specs,
-            engine=engine,
-            hints=[q.engine_hint for q in queries],
-        )
-        results: list[Optional[QueryResult]] = [None] * len(queries)
-        for name, idxs in groups.items():
-            eng = get_engine(name)
-            for i, sol in zip(
-                idxs, eng.solve_batch(ctx, [specs[i] for i in idxs])
+        reg = self.registry
+        t_batch = time.perf_counter()
+        with obs.trace(), obs.span(
+            "query_batch", cat="query", n=len(queries), engine=engine
+        ):
+            with obs.span("resolve_tenant", cat="query"):
+                t = self._resolve_tenant(tenant)
+            t0 = time.perf_counter()
+            with obs.span(
+                "acquire_epoch", cat="query", min_epoch=min_epoch
             ):
-                loc = np.asarray(sol.local_indices, np.int64)
-                results[i] = QueryResult(
-                    indices=entry.src_idx[loc],
-                    local_indices=loc,
-                    diversity=sol.value,
-                    variant=queries[i].variant,
-                    engine=sol.engine,
-                    coreset_size=entry.size,
-                    from_cache=cached,
-                    epoch=snap.epoch,
-                    tenant=t.name,
+                snap = self.runtime.acquire(min_epoch)
+            if min_epoch is not None:
+                # how long freshness (read-your-writes) made this query
+                # wait for its epoch to publish
+                self._m_epoch_wait_s.observe(time.perf_counter() - t0)
+            with obs.span(
+                "cache_entry", cat="query", tenant=t.name,
+                epoch=snap.epoch,
+            ):
+                entry, cached = self._entry(t, snap)
+            reg.counter(
+                "serve.query.cache_hits" if cached
+                else "serve.query.cache_misses",
+                tenant=t.name,
+            ).inc()
+            ctx = self._solve_context(t, snap, entry)
+            specs = [self._solve_spec(entry, q) for q in queries]
+            with obs.span("partition_by_engine", cat="query"):
+                groups = partition_by_engine(
+                    ctx,
+                    specs,
+                    engine=engine,
+                    hints=[q.engine_hint for q in queries],
                 )
+            results: list[Optional[QueryResult]] = [None] * len(queries)
+            for name, idxs in groups.items():
+                eng = get_engine(name)
+                t1 = time.perf_counter()
+                with obs.span(
+                    "solve", cat="query", engine=name, n=len(idxs)
+                ):
+                    sols = eng.solve_batch(
+                        ctx, [specs[i] for i in idxs]
+                    )
+                # materializing local_indices/value blocks on the device:
+                # the sync cost rides in this span, and the solve latency
+                # histogram (below) includes it — what the caller feels
+                with obs.span("device_sync", cat="query", engine=name):
+                    for i, sol in zip(idxs, sols):
+                        loc = np.asarray(sol.local_indices, np.int64)
+                        results[i] = QueryResult(
+                            indices=entry.src_idx[loc],
+                            local_indices=loc,
+                            diversity=sol.value,
+                            variant=queries[i].variant,
+                            engine=sol.engine,
+                            coreset_size=entry.size,
+                            from_cache=cached,
+                            epoch=snap.epoch,
+                            tenant=t.name,
+                        )
+                reg.histogram(
+                    "serve.solve.latency_s", tenant=t.name, engine=name
+                ).observe(time.perf_counter() - t1)
+                reg.histogram(
+                    "serve.solve.batch_size", engine=name
+                ).observe(len(idxs))
+            reg.histogram(
+                "serve.query.latency_s", tenant=t.name
+            ).observe(time.perf_counter() - t_batch)
+            reg.histogram(
+                "serve.query.batch_size", tenant=t.name
+            ).observe(len(queries))
         return results  # type: ignore[return-value]
 
     # ------------------------------------------------------------------

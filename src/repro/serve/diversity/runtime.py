@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 import queue
 import threading
 import time
@@ -57,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ... import obs
 from ...core import geometry
 from ...core.compose import compact_coreset, snapshot_at_epoch
 from ...core.matroid import MatroidSpec
@@ -106,6 +108,8 @@ class EpochSnapshot:
 
 _STOP = object()  # worker shutdown sentinel
 
+_log = logging.getLogger("repro.serve.diversity")
+
 
 class StreamRuntime:
     """Ingestion engine + epoch publisher for one physical stream."""
@@ -129,6 +133,7 @@ class StreamRuntime:
         publish_every: int = 8,
         max_pending: int = 64,
         on_publish: Optional[Callable[[EpochSnapshot], None]] = None,
+        registry: Optional[obs.MetricsRegistry] = None,
     ):
         if spec.kind == "general" and oracle is None:
             raise ValueError("general matroid service needs a host oracle")
@@ -180,6 +185,36 @@ class StreamRuntime:
         self._worker_err: Optional[BaseException] = None
         self._pending = 0  # submitted batches not yet fully ingested
         self._closed = False
+        # --- observability (repro.obs; see README "Observability") ---
+        # submit times of worker-ingested batches awaiting an epoch: the
+        # publish drains it into the staleness histogram (publish time -
+        # submit time, the freshness-under-load signal). Guarded by _cv.
+        self._stale_pending: list[float] = []
+        self.registry = registry if registry is not None else (
+            obs.default_registry()
+        )
+        reg = self.registry
+        self._m_ingest_s = reg.histogram(
+            "serve.ingest.latency_s", placement=self.placement
+        )
+        self._m_ingest_points = reg.counter(
+            "serve.ingest.points", placement=self.placement
+        )
+        self._m_ingest_batches = reg.counter(
+            "serve.ingest.batches", placement=self.placement
+        )
+        self._m_queue_depth = reg.gauge("serve.submit.queue_depth")
+        self._m_submitted = reg.counter("serve.submit.batches")
+        self._m_publish_s = reg.histogram("serve.epoch.publish_latency_s")
+        self._m_staleness_s = reg.histogram("serve.epoch.staleness_s")
+        self._m_epochs = reg.counter("serve.epoch.published")
+        self._m_materializations = reg.counter(
+            "serve.epoch.materializations"
+        )
+        self._m_worker_errors = reg.counter("serve.worker.errors")
+        self._m_callback_errors = reg.counter(
+            "serve.publish.callback_errors"
+        )
 
     # ------------------------------------------------------------------
     # synchronous ingestion (the scan itself)
@@ -315,21 +350,22 @@ class StreamRuntime:
             # aliases its buffers into the new state instead of copying the
             # whole delegate store every call (the dominant fixed cost of a
             # steady-state no-op batch)
-            self._state = ingest_batch_donated(
-                self._state,
-                pts_norm,
-                jnp.asarray(cats_arr),
-                jnp.asarray(valid),
-                self.spec,
-                self._caps_j,
-                self.k,
-                self.tau,
-                base_index=jnp.int32(self.n_offered),
-                variant=self.stream_variant,
-                eps=self.eps,
-                c_const=self.c_const,
-                block_size=self.block_size,
-            )
+            with obs.compile_region(f"ingest[single b={pts.shape[0]}]"):
+                self._state = ingest_batch_donated(
+                    self._state,
+                    pts_norm,
+                    jnp.asarray(cats_arr),
+                    jnp.asarray(valid),
+                    self.spec,
+                    self._caps_j,
+                    self.k,
+                    self.tau,
+                    base_index=jnp.int32(self.n_offered),
+                    variant=self.stream_variant,
+                    eps=self.eps,
+                    c_const=self.c_const,
+                    block_size=self.block_size,
+                )
             self.n_offered += n
             return self._report(n, t0)
 
@@ -420,21 +456,24 @@ class StreamRuntime:
                     ingest_batch_sharded_mapped, donate=True
                 )
             )
-            self._state = ingest(
-                self._state,
-                jnp.asarray(Pb),
-                jnp.asarray(Cb),
-                jnp.asarray(Vb),
-                jnp.asarray(Sb),
-                self.spec,
-                self._caps_j,
-                self.k,
-                self.tau,
-                variant=self.stream_variant,
-                eps=self.eps,
-                c_const=self.c_const,
-                block_size=sb,
-            )
+            with obs.compile_region(
+                f"ingest[{self.placement} s={S} b={mm}]"
+            ):
+                self._state = ingest(
+                    self._state,
+                    jnp.asarray(Pb),
+                    jnp.asarray(Cb),
+                    jnp.asarray(Vb),
+                    jnp.asarray(Sb),
+                    self.spec,
+                    self._caps_j,
+                    self.k,
+                    self.tau,
+                    variant=self.stream_variant,
+                    eps=self.eps,
+                    c_const=self.c_const,
+                    block_size=sb,
+                )
             self.n_offered += n
             return self._report(n, t0)
 
@@ -498,21 +537,24 @@ class StreamRuntime:
                 self._rr += 1
             if self._fp_cache is not None:
                 self._fp_cache[i] = None  # this shard's pull is now stale
-            self._state[i] = ingest_batch_donated(
-                self._state[i],
-                pts_norm,
-                jnp.asarray(cats_arr),
-                jnp.asarray(valid),
-                self.spec,
-                self._caps_j,
-                self.k,
-                self.tau,
-                base_index=jnp.int32(self.n_offered),
-                variant=self.stream_variant,
-                eps=self.eps,
-                c_const=self.c_const,
-                block_size=self.block_size,
-            )
+            with obs.compile_region(
+                f"ingest[pipeline b={pts.shape[0]}]"
+            ):
+                self._state[i] = ingest_batch_donated(
+                    self._state[i],
+                    pts_norm,
+                    jnp.asarray(cats_arr),
+                    jnp.asarray(valid),
+                    self.spec,
+                    self._caps_j,
+                    self.k,
+                    self.tau,
+                    base_index=jnp.int32(self.n_offered),
+                    variant=self.stream_variant,
+                    eps=self.eps,
+                    c_const=self.c_const,
+                    block_size=self.block_size,
+                )
             self.n_offered += n
             return self._report(n, t0)
 
@@ -523,6 +565,9 @@ class StreamRuntime:
         self._coreset_size = size
         self._dirty = True
         self._unpublished += 1
+        self._m_ingest_s.observe(time.perf_counter() - t0)
+        self._m_ingest_points.inc(n)
+        self._m_ingest_batches.inc()
         return IngestReport(
             n=n,
             total=self.n_offered,
@@ -582,6 +627,7 @@ class StreamRuntime:
         unchanged-coreset ingest does not bump the epoch — the published
         snapshot already serves it.
         """
+        t0 = time.perf_counter()
         with self._cv:
             if self._state is None:
                 raise RuntimeError("ingest at least one batch first")
@@ -592,13 +638,18 @@ class StreamRuntime:
             if not changed and not force:
                 return pub
             now = time.monotonic()
-            if changed:
-                pts, cats, src = compact_coreset(
-                    snapshot_at_epoch(self._state)
-                )
-                self.snapshot_materializations += 1
-            else:  # forced epoch bump over an unchanged coreset
-                pts, cats, src = pub.points, pub.cats, pub.src_idx
+            with obs.span(
+                "publish", cat="ingest",
+                force=force, materialize=changed,
+            ):
+                if changed:
+                    pts, cats, src = compact_coreset(
+                        snapshot_at_epoch(self._state)
+                    )
+                    self.snapshot_materializations += 1
+                    self._m_materializations.inc()
+                else:  # forced epoch bump over an unchanged coreset
+                    pts, cats, src = pub.points, pub.cats, pub.src_idx
             snap = EpochSnapshot(
                 epoch=(pub.epoch if pub else 0) + 1,
                 fingerprint=self._fingerprint,
@@ -612,9 +663,25 @@ class StreamRuntime:
             self._dirty = False
             self._unpublished = 0
             self.epochs_published += 1
+            self._m_epochs.inc()
+            self._m_publish_s.observe(time.perf_counter() - t0)
+            # every worker-ingested batch awaiting an epoch is now covered
+            # by this publish: its staleness is publish time - submit time
+            t_pub = time.monotonic()
+            for t_submit in self._stale_pending:
+                self._m_staleness_s.observe(t_pub - t_submit)
+            self._stale_pending.clear()
             self._cv.notify_all()
         if self.on_publish is not None:
-            self.on_publish(snap)
+            try:
+                self.on_publish(snap)
+            except Exception:
+                # a subscriber's bug must not kill the ingest worker (or a
+                # synchronous refresh caller): count it, log it, move on
+                self._m_callback_errors.inc()
+                _log.exception(
+                    "on_publish callback raised for epoch %d", snap.epoch
+                )
         return snap
 
     def acquire(
@@ -698,21 +765,30 @@ class StreamRuntime:
         on the next ``submit``/``flush``.
         """
         pts = np.asarray(points, np.float32)
-        with self._cv:
-            self._raise_worker_error()
-            if self._closed:
-                raise RuntimeError("runtime is closed")
-            if self._worker is None:
-                self._worker = threading.Thread(
-                    target=self._worker_loop,
-                    name="stream-runtime-ingest",
-                    daemon=True,
-                )
-                self._worker.start()
-            self._pending += 1
-        self._queue.put((pts, cats))
+        with obs.trace() as tid, obs.span(
+            "submit", cat="ingest", n=int(pts.shape[0])
+        ):
+            with self._cv:
+                self._raise_worker_error()
+                if self._closed:
+                    raise RuntimeError("runtime is closed")
+                if self._worker is None:
+                    self._worker = threading.Thread(
+                        target=self._worker_loop,
+                        name="stream-runtime-ingest",
+                        daemon=True,
+                    )
+                    self._worker.start()
+                self._pending += 1
+                self._m_submitted.inc()
+            # queue items carry submit time (the staleness clock) and the
+            # submitter's trace ID (the worker resumes it, so one trace
+            # covers submit -> ingest -> publish across threads)
+            self._queue.put((pts, cats, time.monotonic(), tid))
+            self._m_queue_depth.set(self._queue.qsize())
 
     def _drop_pending_item(self, err: BaseException) -> None:
+        self._m_worker_errors.inc()
         with self._cv:
             if self._worker_err is None:
                 self._worker_err = err
@@ -736,7 +812,8 @@ class StreamRuntime:
                             "batch submitted concurrently with close() "
                             "was dropped"
                         ))
-            pts, cats = item
+            pts, cats, t_submit, tid = item
+            self._m_queue_depth.set(self._queue.qsize())
             if self._worker_err is not None:
                 # after a failed batch the stream truncates there: later
                 # batches are dropped (not ingested out of order), so the
@@ -744,27 +821,32 @@ class StreamRuntime:
                 # after the failure needs re-submitting
                 self._drop_pending_item(self._worker_err)
                 continue
-            try:
-                self.ingest(pts, cats)
-            except BaseException as e:  # noqa: BLE001 — surfaced to callers
-                self._drop_pending_item(e)
-                continue
-            with self._cv:
-                self._pending -= 1
-                drained = self._pending == 0
-                overdue = self._unpublished >= self.publish_every
-                self._cv.notify_all()
-            if drained or overdue:
-                # publish off the ingest lock's critical path: the epoch
-                # materialization (device pull) runs here, in the worker,
-                # never in a query thread
+            with obs.resume_trace(tid):
                 try:
-                    self.refresh(force=drained)
-                except BaseException as e:  # noqa: BLE001
-                    with self._cv:
-                        if self._worker_err is None:
-                            self._worker_err = e
-                        self._cv.notify_all()
+                    with obs.span(
+                        "worker_ingest", cat="ingest", n=int(pts.shape[0])
+                    ):
+                        self.ingest(pts, cats)
+                except BaseException as e:  # noqa: BLE001 — surfaced to callers
+                    self._drop_pending_item(e)
+                    continue
+                with self._cv:
+                    self._pending -= 1
+                    drained = self._pending == 0
+                    overdue = self._unpublished >= self.publish_every
+                    self._stale_pending.append(t_submit)
+                    self._cv.notify_all()
+                if drained or overdue:
+                    # publish off the ingest lock's critical path: the epoch
+                    # materialization (device pull) runs here, in the worker,
+                    # never in a query thread
+                    try:
+                        self.refresh(force=drained)
+                    except BaseException as e:  # noqa: BLE001
+                        with self._cv:
+                            if self._worker_err is None:
+                                self._worker_err = e
+                            self._cv.notify_all()
 
     def _raise_worker_error(self) -> None:
         if self._worker_err is not None:

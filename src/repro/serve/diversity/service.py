@@ -75,15 +75,18 @@ class DiversityService:
         num_shards: int = 1,
         block_size: int = 128,
         placement: str = "auto",
+        registry=None,
     ):
         self.runtime = StreamRuntime(
             spec, k,
             tau=tau, metric=metric, caps=caps, slot_cap=slot_cap,
             variant=variant, eps=eps, c_const=c_const, oracle=oracle,
             num_shards=num_shards, block_size=block_size,
-            placement=placement,
+            placement=placement, registry=registry,
         )
-        self.frontend = QueryFrontend(self.runtime, cache=cache)
+        self.frontend = QueryFrontend(
+            self.runtime, cache=cache, registry=registry
+        )
         self.cache = self.frontend.cache
         self.cache_key = self.frontend.default_tenant.key
         self.spec = spec
