@@ -47,6 +47,19 @@ single-tenant baseline). ``--check`` gates the two machine-relative
 ratios everywhere: ``contention_p95_ratio <= 2.0`` and
 ``multi_tenant_min_ratio >= 0.8``.
 
+Fault tolerance (``fault_tolerance``): crash-recovery wall time and WAL
+replay throughput (durable stream killed without close, restored via
+checkpoint + WAL-tail replay, parity asserted against the live
+fingerprint), a seeded chaos ingest (worker crashes + transient errors +
+a poisoned batch, stream must keep flowing), and a 4x-saturation
+deadline burst (exact queries offered at 4x their measured capacity with
+``deadline_s`` — every request must complete, degrade, or shed inside
+the budget; misses are gated via the min-over-rounds methodology).
+``--check`` gates ``replay_parity``, ``recovery_s <= 60``,
+``replay_pps > 0``, ``stream_continued``, ``deadline_violations == 0``
+and ``goodput >= 0.5``; the post-crash replay checkpoint + restore
+report land in ``BENCH_fault_recovery/`` (CI uploads it).
+
 Observability (``repro.obs``): every run embeds the full metrics snapshot
 in the artifact (``metrics``), the recompile census keyed by compile
 region (``recompiles_by_key``), the warmed-window recompile count
@@ -286,6 +299,198 @@ def _mixed_workload(P, cats, caps, spec, k: int, tau: int, quick: bool,
     )
 
 
+def _fault_tolerance(P, cats, caps, spec, k: int, tau: int,
+                     quick: bool) -> dict:
+    """Fault-tolerance section: recovery, chaos ingest, deadline burst.
+
+    *Recovery*: a durable stream (WAL + cadence checkpoints) is killed
+    without ``close()`` and rebuilt with ``StreamRuntime.restore`` —
+    recorded are the recovery wall time, the WAL-tail replay throughput,
+    and ``replay_parity`` (restored fingerprint == the dead runtime's).
+    The newest checkpoint plus the restore report are copied to
+    ``BENCH_fault_recovery/`` so CI preserves the post-crash state.
+
+    *Chaos*: a seeded ``FaultPlan`` injects worker crashes (supervisor
+    restarts), transient ingest errors (retried away) and one
+    twice-failing batch (quarantined); ``stream_continued`` asserts the
+    stream kept flowing and lost exactly the poisoned points.
+
+    *Deadline*: exact star/tree queries offered with a per-batch
+    ``deadline_s`` of 1/4 their measured exact wall — a 4x-saturation
+    burst. The admission layer must degrade (or shed) every batch into
+    the budget; ``deadline_violations`` is the min over rounds of
+    per-round deadline misses (one scheduler burst cannot fail the gate,
+    unbounded queuing misses in every round) and ``goodput`` is the
+    answered (non-shed) fraction.
+    """
+    import shutil
+    import tempfile
+
+    from repro import obs
+    from repro.serve.diversity import (
+        DiversityQuery,
+        DurabilityConfig,
+        FaultPlan,
+        FaultPolicy,
+        FaultRule,
+        QueryFrontend,
+        StreamRuntime,
+    )
+
+    n = P.shape[0]
+    reg = obs.default_registry()
+
+    # ---- recovery: kill a durable stream, restore, measure ----------
+    tmp = tempfile.mkdtemp(prefix="bench-fault-")
+    batch = 256
+    dur = DurabilityConfig(dir=tmp, checkpoint_every=4, keep=3)
+    rt = StreamRuntime(spec, k, tau=tau, caps=caps,
+                       block_size=BLOCK_SIZE, durability=dur)
+    for off in range(0, n, batch):
+        rt.submit(P[off:off + batch], cats[off:off + batch])
+    rt.flush()
+    live_fp = rt.latest().fingerprint
+    # the "kill": no close(), no parting checkpoint — restore must
+    # replay the WAL tail beyond the newest cadence checkpoint
+    with Timer() as t_rec:
+        back = StreamRuntime.restore(tmp)
+    rep = back.restore_report
+    parity = back.latest().fingerprint == live_fp
+    replay_pps = (
+        rep["replayed_points"] / rep["restore_s"]
+        if rep["restore_s"] > 0 else 0.0
+    )
+    # preserve the post-crash replay state as a CI artifact
+    art_dir = os.path.join(os.path.dirname(_JSON_PATH),
+                           "BENCH_fault_recovery")
+    shutil.rmtree(art_dir, ignore_errors=True)
+    os.makedirs(art_dir, exist_ok=True)
+    back.checkpoint(force=True)
+    from repro.serve.diversity import latest_checkpoint
+    newest = latest_checkpoint(tmp)
+    if newest:
+        shutil.copy2(newest, art_dir)
+    with open(os.path.join(art_dir, "recovery.json"), "w") as f:
+        json.dump(dict(rep, replay_parity=bool(parity),
+                       recovery_wall_s=float(t_rec.s)), f, indent=2,
+                  default=str)
+    back.close()
+    rt.close()
+    shutil.rmtree(tmp, ignore_errors=True)
+    recovery = dict(
+        n_ingested=int(n),
+        recovery_s=float(t_rec.s),
+        replayed_batches=int(rep["replayed_batches"]),
+        replayed_points=int(rep["replayed_points"]),
+        replay_pps=float(replay_pps),
+        replay_parity=bool(parity),
+        artifact="BENCH_fault_recovery/",
+    )
+
+    # ---- chaos ingest: crashes + retries + one poisoned batch -------
+    cbatch = 128
+    plan = FaultPlan(7, [
+        FaultRule(site="worker.loop", kind="crash", after=2, every=3,
+                  times=2),
+        FaultRule(site="worker.ingest", kind="error", after=5, every=4,
+                  times=4),
+        # two consecutive fires exhaust max_retries=1: one poisoned batch
+        FaultRule(site="worker.ingest", kind="error", after=24, times=2),
+    ])
+    rt = StreamRuntime(
+        spec, k, tau=tau, caps=caps, block_size=BLOCK_SIZE,
+        faults=plan,
+        fault_policy=FaultPolicy(max_retries=1, backoff_s=0.01,
+                                 on_failure="quarantine",
+                                 max_worker_restarts=5),
+    )
+    c0 = reg.counter("serve.worker.crashes").value
+    r0 = reg.counter("serve.worker.restarts").value
+    t0 = reg.counter("serve.worker.retries").value
+    for off in range(0, n, cbatch):
+        rt.submit(P[off:off + cbatch], cats[off:off + cbatch])
+    rt.flush()  # quarantine keeps the stream alive: must not raise
+    lost = sum(int(b.points.shape[0]) for b in rt.poison)
+    chaos = dict(
+        crashes=int(reg.counter("serve.worker.crashes").value - c0),
+        restarts=int(reg.counter("serve.worker.restarts").value - r0),
+        retries=int(reg.counter("serve.worker.retries").value - t0),
+        poisoned=len(rt.poison),
+        poisoned_points=int(lost),
+        stream_continued=bool(rt.n_offered == n - lost and lost > 0),
+    )
+    rt.close()
+
+    # ---- deadline burst: 4x saturation, degrade-or-shed inside budget
+    rt = StreamRuntime(spec, k, tau=tau, caps=caps, block_size=BLOCK_SIZE)
+    fe = QueryFrontend(rt)
+    rt.ingest(P, cats)
+    # a dedicated tenant: its latency histograms (the admission
+    # predictor) train on THIS section's warm calls only — the earlier
+    # sections' compile-inclusive observations would skew every engine's
+    # p95 toward seconds and turn the whole burst into sheds
+    tenant = "burst"
+    fe.register_tenant(tenant)
+    qs_exact = [
+        DiversityQuery(k=3, variant="tree" if i % 2 else "star")
+        for i in range(6)
+    ]
+    qs_greedy = [
+        dataclasses.replace(q, engine_hint="jit_greedy") for q in qs_exact
+    ]
+    fe.query_batch(qs_exact, tenant=tenant)  # warm + feed the predictor
+    fe.query_batch(qs_greedy, tenant=tenant)
+    walls_e, walls_g = [], []
+    for _ in range(3):
+        with Timer() as te:
+            fe.query_batch(qs_exact, tenant=tenant)
+        walls_e.append(te.s)
+    # enough warm greedy observations that the predictor's p95 rank
+    # clears the one compile-inclusive first call (rank ceil(.95n) < n
+    # needs n >= 20) — the burst must see the steady-state greedy cost
+    for _ in range(20):
+        with Timer() as tg:
+            fe.query_batch(qs_greedy, tenant=tenant)
+        walls_g.append(tg.s)
+    L_exact, L_greedy = float(np.min(walls_e)), float(np.min(walls_g))
+    # 4x saturation: the budget is a quarter of what exact serving needs
+    # (floored so the degraded engine genuinely fits inside it)
+    deadline_s = max(L_exact / 4.0, 2.5 * L_greedy, 0.02)
+    rounds, per_round = 4, 6
+    miss_c = reg.counter("serve.query.deadline_miss", tenant=tenant)
+    # materialize the outcome counters up front so the embedded metrics
+    # snapshot always carries all three series, zeros included
+    reg.counter("serve.query.shed", tenant=tenant)
+    reg.counter("serve.query.degraded", tenant=tenant)
+    outcomes = {"ok": 0, "degraded": 0, "shed": 0}
+    misses = []
+    for _ in range(rounds):
+        m0 = miss_c.value
+        for _ in range(per_round):
+            for r in fe.query_batch(qs_exact, tenant=tenant,
+                                    deadline_s=deadline_s):
+                key = ("shed" if r.shed
+                       else "degraded" if r.degraded else "ok")
+                outcomes[key] += 1
+        misses.append(miss_c.value - m0)
+    rt.close()
+    total = sum(outcomes.values())
+    deadline = dict(
+        deadline_s=float(deadline_s),
+        exact_batch_s=L_exact,
+        greedy_batch_s=L_greedy,
+        saturation=4.0,
+        queries=int(total),
+        ok_fraction=outcomes["ok"] / total,
+        degraded_fraction=outcomes["degraded"] / total,
+        shed_fraction=outcomes["shed"] / total,
+        goodput=(outcomes["ok"] + outcomes["degraded"]) / total,
+        deadline_violations=int(min(misses)),
+        deadline_misses_by_round=[int(m) for m in misses],
+    )
+    return dict(recovery=recovery, chaos=chaos, deadline=deadline)
+
+
 def _bench(quick: bool, num_shards: int | None = None) -> dict:
     import jax
 
@@ -474,6 +679,10 @@ def _bench(quick: bool, num_shards: int | None = None) -> dict:
         reps=int(ob_reps),
     )
 
+    # fault tolerance: recovery, chaos ingest, deadline burst (before the
+    # mixed workload so the trace ring still ends on the full span story)
+    fault = _fault_tolerance(P, cats, caps, spec, k, tau, quick)
+
     # concurrent ingest+query + multi-tenant fan-out (its own runtime so
     # the contention window doesn't perturb the services measured above)
     mixed = _mixed_workload(P, cats, caps, spec, k, tau, quick,
@@ -521,6 +730,7 @@ def _bench(quick: bool, num_shards: int | None = None) -> dict:
         batched_qps_by_engine=batched_qps_by_engine,
         engine_mix=engine_mix,
         mixed_workload=mixed,
+        fault_tolerance=fault,
         transversal_n=int(n_tv),
         transversal_coreset_size=int(res_tv.coreset_size),
         offline_diversity=float(sol.diversity),
@@ -675,6 +885,43 @@ def check(tolerance: float = 0.2, quick: bool = True) -> int:
     else:  # the section must exist: its absence is itself a regression
         print("check: mixed_workload section missing -> REGRESSION")
         rc = 1
+    # fault-tolerance gates (machine-relative / boolean, enforced
+    # everywhere): restore must rebuild the exact stream within bounded
+    # time, the chaos ingest must survive its injected faults, and the
+    # 4x-saturation deadline burst must answer inside the budget
+    ft = new.get("fault_tolerance", {})
+    if ft:
+        rec = ft["recovery"]
+        ok = (rec["replay_parity"] and rec["recovery_s"] <= 60.0
+              and rec["replay_pps"] > 0)
+        print(f"check: fault recovery: parity={rec['replay_parity']}, "
+              f"recovery {rec['recovery_s']:.2f}s (ceiling 60), replay "
+              f"{rec['replay_pps']:.0f} pps over "
+              f"{rec['replayed_batches']} batches -> "
+              f"{'OK' if ok else 'RECOVERY REGRESSION'}")
+        if not ok:
+            rc = 1
+        ch = ft["chaos"]
+        ok = ch["stream_continued"] and ch["crashes"] >= 1
+        print(f"check: fault chaos: crashes {ch['crashes']}, restarts "
+              f"{ch['restarts']}, retries {ch['retries']}, poisoned "
+              f"{ch['poisoned']}, stream_continued="
+              f"{ch['stream_continued']} -> "
+              f"{'OK' if ok else 'SUPERVISION REGRESSION'}")
+        if not ok:
+            rc = 1
+        dl = ft["deadline"]
+        ok = dl["deadline_violations"] == 0 and dl["goodput"] >= 0.5
+        print(f"check: fault deadline: {dl['saturation']:.0f}x burst, "
+              f"budget {dl['deadline_s'] * 1e3:.0f}ms, goodput "
+              f"{dl['goodput']:.2f} (floor 0.50), violations "
+              f"{dl['deadline_violations']} (min over rounds, must be 0) "
+              f"-> {'OK' if ok else 'DEADLINE REGRESSION'}")
+        if not ok:
+            rc = 1
+    else:
+        print("check: fault_tolerance section missing -> REGRESSION")
+        rc = 1
     # steady-state recompile gate (machine-independent, gated everywhere):
     # the warmed measurement windows must compile NOTHING — a recompile
     # there means a jit cache key (bucketed shape, static arg) failed to
@@ -781,6 +1028,21 @@ def main(quick: bool = False, emit_json: bool = False,
         yield csv_line(f"serve_tenant_{name}", 1e6 / tqps,
                        f"qps={tqps:.0f} "
                        f"min_ratio={mw['multi_tenant_min_ratio']:.2f}")
+    ft = r["fault_tolerance"]
+    yield csv_line("serve_recovery", ft["recovery"]["recovery_s"] * 1e6,
+                   f"replay_pps={ft['recovery']['replay_pps']:.0f} "
+                   f"parity={ft['recovery']['replay_parity']} "
+                   f"batches={ft['recovery']['replayed_batches']}")
+    yield csv_line("serve_chaos", 0.0,
+                   f"crashes={ft['chaos']['crashes']} "
+                   f"retries={ft['chaos']['retries']} "
+                   f"poisoned={ft['chaos']['poisoned']} "
+                   f"continued={ft['chaos']['stream_continued']}")
+    yield csv_line("serve_deadline", ft["deadline"]["deadline_s"] * 1e6,
+                   f"goodput={ft['deadline']['goodput']:.2f} "
+                   f"degraded={ft['deadline']['degraded_fraction']:.2f} "
+                   f"shed={ft['deadline']['shed_fraction']:.2f} "
+                   f"violations={ft['deadline']['deadline_violations']}")
     yield csv_line("serve_obs_overhead", 0.0,
                    f"ingest={r['obs_overhead']['ingest_overhead']:+.1%} "
                    f"batched={r['obs_overhead']['batched_qps_overhead']:+.1%} "

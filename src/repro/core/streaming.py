@@ -471,6 +471,29 @@ def epoch_fingerprint(st: StreamState) -> tuple[int, int]:
     return hash((int(count), int(h1), int(h2))), int(count)
 
 
+def state_to_arrays(st: StreamState) -> dict:
+    """Serialize one ``StreamState`` to plain host arrays, field-keyed.
+
+    The scan is a pure fold, so this dict — float32/int32/bool buffers
+    pulled off the device — IS the resumable stream: round-tripping
+    through ``state_from_arrays`` and resuming ingestion is bit-identical
+    to never having serialized (pinned by the checkpoint/restore parity
+    suite). Works on single and stacked (leading shard axis) states
+    alike; the serving checkpoint layer (``serve.diversity.checkpoint``)
+    handles the per-shard list of the pipeline placement.
+    """
+    return {f: np.asarray(getattr(st, f)) for f in StreamState._fields}
+
+
+def state_from_arrays(arrays) -> StreamState:
+    """Rebuild a device ``StreamState`` from ``state_to_arrays`` output
+    (dtypes preserved exactly; missing fields raise ``KeyError``)."""
+    return StreamState(
+        **{f: jnp.asarray(np.asarray(arrays[f]))
+           for f in StreamState._fields}
+    )
+
+
 def snapshot_coreset(st: StreamState) -> Coreset:
     """Assemble the current coreset from the delegate buffers (jit-safe)."""
     tcap, slot_cap, d = st.dp.shape

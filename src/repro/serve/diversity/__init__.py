@@ -26,17 +26,51 @@ uniform/partition/transversal matroids onto the vmapped jit solver and
 keeps everything else on the host reference solvers, so every answer
 matches ``solve_dmmc`` on the same coreset. See README "Serving
 architecture" and "Solver engines".
+
+Fault tolerance (README "Fault tolerance"): ``durability=`` adds a
+write-ahead log + periodic checkpoints (``StreamRuntime.restore`` /
+``DiversityService.restore`` rebuild a bit-identical stream),
+``fault_policy=FaultPolicy(...)`` supervises the ingest worker
+(retry/backoff, poison-queue quarantine, crash restarts),
+``query_batch(deadline_s=...)`` degrades or sheds instead of queuing
+unboundedly, and ``faults=FaultPlan(...)`` arms the deterministic
+chaos-testing harness.
 """
 from .cache import CacheKey, CacheStats, CoresetEntry, DistanceCache
+from .checkpoint import (
+    DurabilityConfig,
+    latest_checkpoint,
+    list_checkpoints,
+    load_checkpoint,
+    save_checkpoint,
+)
+from .faults import (
+    FaultPlan,
+    FaultPolicy,
+    FaultRule,
+    InjectedCrash,
+    InjectedFault,
+)
 from .frontend import QueryFrontend
 from .query import DiversityQuery, QueryResult
-from .runtime import EpochSnapshot, IngestReport, StreamRuntime
+from .runtime import (
+    EpochSnapshot,
+    IngestReport,
+    PoisonedBatch,
+    StreamRuntime,
+)
 from .service import DiversityService
 from .tenants import DEFAULT_TENANT, Tenant, TenantRegistry
+from .wal import WalError, WalRecord, WriteAheadLog
 
 __all__ = [
     "CacheKey", "CacheStats", "CoresetEntry", "DistanceCache",
     "DiversityQuery", "QueryResult", "DiversityService", "IngestReport",
     "EpochSnapshot", "StreamRuntime", "QueryFrontend",
     "Tenant", "TenantRegistry", "DEFAULT_TENANT",
+    "DurabilityConfig", "latest_checkpoint", "list_checkpoints",
+    "load_checkpoint", "save_checkpoint",
+    "FaultPlan", "FaultPolicy", "FaultRule",
+    "InjectedCrash", "InjectedFault", "PoisonedBatch",
+    "WalError", "WalRecord", "WriteAheadLog",
 ]

@@ -198,6 +198,94 @@ class QueryFrontend:
             allow=candidate_mask(entry.cats, q.allowed_cats),
         )
 
+    # ------------------------------------------------------------------
+    # deadline-aware admission
+    # ------------------------------------------------------------------
+
+    def _predict_s(self, tenant: str, engine: str) -> float:
+        """Predicted wall time of one ``solve_batch`` call on ``engine``
+        for this tenant: the p95 of its measured latency histogram
+        (PR 6's ``serve.solve.latency_s``). 0.0 with no history — the
+        first calls are admitted and train the predictor."""
+        h = self.registry.histogram(
+            "serve.solve.latency_s", tenant=tenant, engine=engine
+        )
+        return h.quantile(0.95) if h.count else 0.0
+
+    def _admit(
+        self,
+        ctx: SolveContext,
+        specs: Sequence[SolveSpec],
+        groups: dict,
+        tenant: str,
+        remaining_s: float,
+    ) -> tuple[dict, set, set]:
+        """Fit the engine plan into the remaining deadline budget.
+
+        Degradation matrix (in order): (1) exact star/tree queries
+        routed to ``host_exhaustive`` move to the vmapped ``jit_greedy``
+        engine when eligible — still a valid independent set, value is
+        the greedy approximation (``degraded=True``); (2) whatever still
+        doesn't fit is shed, most expensive predicted group first
+        (``shed=True``, never queued past the deadline). Sum queries
+        have no faster approximate target in the registry, so an
+        over-budget sum group sheds rather than degrades.
+        """
+        degraded: set = set()
+        shed: set = set()
+        groups = {n: list(ix) for n, ix in groups.items() if ix}
+        if remaining_s <= 0:
+            for ix in groups.values():
+                shed.update(ix)
+            return {}, degraded, shed
+        total = sum(self._predict_s(tenant, n) for n in groups)
+        if total > remaining_s and "host_exhaustive" in groups:
+            greedy = get_engine("jit_greedy")
+            moved = [
+                i for i in groups["host_exhaustive"]
+                if greedy.eligible(ctx, specs[i])
+            ]
+            if moved:
+                kept = [
+                    i for i in groups["host_exhaustive"] if i not in moved
+                ]
+                if kept:
+                    groups["host_exhaustive"] = kept
+                else:
+                    del groups["host_exhaustive"]
+                groups.setdefault("jit_greedy", []).extend(moved)
+                degraded.update(moved)
+                total = sum(self._predict_s(tenant, n) for n in groups)
+        if total > remaining_s:
+            for name in sorted(
+                groups, key=lambda n: self._predict_s(tenant, n),
+                reverse=True,
+            ):
+                if total <= remaining_s:
+                    break
+                total -= self._predict_s(tenant, name)
+                ix = groups.pop(name)
+                shed.update(ix)
+                degraded.difference_update(ix)
+        return groups, degraded, shed
+
+    def _shed_result(
+        self, q: DiversityQuery, entry, cached: bool, epoch: int,
+        tenant: str,
+    ) -> QueryResult:
+        return QueryResult(
+            indices=np.empty((0,), np.int64),
+            local_indices=np.empty((0,), np.int64),
+            diversity=0.0,
+            variant=q.variant,
+            engine="shed",
+            coreset_size=0 if entry is None else entry.size,
+            from_cache=cached,
+            epoch=epoch,
+            tenant=tenant,
+            shed=True,
+        )
+
     def query(
         self,
         q: DiversityQuery,
@@ -205,12 +293,14 @@ class QueryFrontend:
         tenant=None,
         engine: str = "auto",
         min_epoch: Optional[int] = None,
+        deadline_s: Optional[float] = None,
     ) -> QueryResult:
         """Answer one query on the named tenant's cached matrix over the
         newest published epoch (see ``query_batch`` for the engine and
         freshness semantics)."""
         return self.query_batch(
-            [q], tenant=tenant, engine=engine, min_epoch=min_epoch
+            [q], tenant=tenant, engine=engine, min_epoch=min_epoch,
+            deadline_s=deadline_s,
         )[0]
 
     def query_batch(
@@ -220,6 +310,7 @@ class QueryFrontend:
         tenant=None,
         engine: str = "auto",
         min_epoch: Optional[int] = None,
+        deadline_s: Optional[float] = None,
     ) -> list[QueryResult]:
         """Answer a batch of heterogeneous queries against ONE epoch and
         ONE tenant cache entry.
@@ -237,22 +328,57 @@ class QueryFrontend:
         epoch returned by ``flush()`` to read your own writes); without
         it, the newest published epoch answers immediately — during
         active ingestion that answer is stale-but-consistent, never torn.
+
+        ``deadline_s`` arms deadline-aware admission: before solving,
+        the measured per-engine latency (p95 of PR 6's histograms)
+        predicts whether the plan fits the remaining budget. Over-budget
+        exact star/tree queries downgrade to ``jit_greedy`` (result
+        marked ``degraded=True``); whatever still doesn't fit is shed
+        (``shed=True``, ``engine="shed"``, empty selection) instead of
+        queuing past the deadline. Per-tenant outcomes land in
+        ``serve.query.degraded`` / ``serve.query.shed`` /
+        ``serve.query.deadline_miss``.
         """
         queries = list(queries)
         if not queries:
             return []
         reg = self.registry
         t_batch = time.perf_counter()
+        deadline = None if deadline_s is None else t_batch + deadline_s
         with obs.trace(), obs.span(
             "query_batch", cat="query", n=len(queries), engine=engine
         ):
             with obs.span("resolve_tenant", cat="query"):
                 t = self._resolve_tenant(tenant)
             t0 = time.perf_counter()
+
+            def _shed_all(entry=None, cached=False, epoch=-1):
+                reg.counter(
+                    "serve.query.shed", tenant=t.name
+                ).inc(len(queries))
+                return [
+                    self._shed_result(q, entry, cached, epoch, t.name)
+                    for q in queries
+                ]
+
             with obs.span(
                 "acquire_epoch", cat="query", min_epoch=min_epoch
             ):
-                snap = self.runtime.acquire(min_epoch)
+                try:
+                    snap = self.runtime.acquire(
+                        min_epoch,
+                        **(
+                            {}
+                            if deadline is None
+                            else {"timeout": max(
+                                0.0, deadline - time.perf_counter()
+                            )}
+                        ),
+                    )
+                except TimeoutError:
+                    # the epoch can't publish inside the budget: shed
+                    # the whole batch rather than blocking past it
+                    return _shed_all()
             if min_epoch is not None:
                 # how long freshness (read-your-writes) made this query
                 # wait for its epoch to publish
@@ -276,7 +402,27 @@ class QueryFrontend:
                     engine=engine,
                     hints=[q.engine_hint for q in queries],
                 )
+            degraded_ix: set = set()
+            shed_ix: set = set()
+            if deadline is not None:
+                with obs.span("admit", cat="query"):
+                    groups, degraded_ix, shed_ix = self._admit(
+                        ctx, specs, groups, t.name,
+                        deadline - time.perf_counter(),
+                    )
+                if degraded_ix:
+                    reg.counter(
+                        "serve.query.degraded", tenant=t.name
+                    ).inc(len(degraded_ix))
+                if shed_ix:
+                    reg.counter(
+                        "serve.query.shed", tenant=t.name
+                    ).inc(len(shed_ix))
             results: list[Optional[QueryResult]] = [None] * len(queries)
+            for i in shed_ix:
+                results[i] = self._shed_result(
+                    queries[i], entry, cached, snap.epoch, t.name
+                )
             for name, idxs in groups.items():
                 eng = get_engine(name)
                 t1 = time.perf_counter()
@@ -302,6 +448,7 @@ class QueryFrontend:
                             from_cache=cached,
                             epoch=snap.epoch,
                             tenant=t.name,
+                            degraded=i in degraded_ix,
                         )
                 reg.histogram(
                     "serve.solve.latency_s", tenant=t.name, engine=name
@@ -315,6 +462,17 @@ class QueryFrontend:
             reg.histogram(
                 "serve.query.batch_size", tenant=t.name
             ).observe(len(queries))
+            if (
+                deadline is not None
+                and time.perf_counter() > deadline
+            ):
+                # admitted work still overran the budget: the predictor
+                # was wrong (cold histograms, a compile) — count it so
+                # the miss rate is observable, and the histograms it
+                # just fed make the next prediction honest
+                reg.counter(
+                    "serve.query.deadline_miss", tenant=t.name
+                ).inc()
         return results  # type: ignore[return-value]
 
     # ------------------------------------------------------------------

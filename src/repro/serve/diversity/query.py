@@ -54,6 +54,15 @@ class QueryResult:
     # trail of the multi-tenant runtime
     epoch: int = -1
     tenant: Optional[str] = None
+    # deadline-aware admission outcomes (query_batch(deadline_s=...)):
+    # degraded — answered by a faster non-parity engine (jit_greedy)
+    # because the exact engine's predicted latency missed the deadline;
+    # the answer is a valid independent set, its diversity value is the
+    # greedy approximation, not the exact optimum. shed — not solved at
+    # all (indices empty, engine="shed"): no engine was predicted to
+    # finish in time. Both always within-deadline, never queued unboundedly.
+    degraded: bool = False
+    shed: bool = False
 
 
 def candidate_mask(

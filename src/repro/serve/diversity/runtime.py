@@ -41,18 +41,36 @@ Epoch semantics:
   needs everything it submitted can then pass that epoch as ``min_epoch``
   to ``acquire`` (or ``QueryFrontend.query``) — the freshness contract.
 
-Errors raised by the worker are captured and re-raised on the next
-``submit``/``flush``; ``close()`` stops the worker (idempotent).
+Fault tolerance (see README "Fault tolerance"):
+
+* with ``durability=DurabilityConfig(dir)`` every accepted batch is
+  appended to a write-ahead log *before* it is enqueued/applied, and the
+  scan state is checkpointed every ``checkpoint_every`` applied batches
+  — ``StreamRuntime.restore(dir)`` rebuilds a bit-identical stream from
+  the newest checkpoint plus the WAL tail replayed in submission order
+  (the paper's §3 composability: the state is a pure fold over batches);
+* ``fault_policy=FaultPolicy(...)`` upgrades the worker from the
+  historical fail-fast truncation to supervised ingestion: transient
+  errors retry with capped exponential backoff, repeatedly-failing
+  batches quarantine to ``StreamRuntime.poison`` (stream continues), and
+  a crashed worker thread is respawned preserving submission order;
+* ``faults=FaultPlan(...)`` arms the deterministic fault-injection
+  harness at the named sites (chaos tests / bench only).
+
+With the default policy, errors raised by the worker truncate the
+stream and re-raise on the next ``submit``/``flush``; ``close()`` drains
+the queue then stops the worker (idempotent).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import logging
+import os
 import queue
 import threading
 import time
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +90,16 @@ from ...core.streaming import (
     init_stream_state,
     resolve_placement,
 )
+from .checkpoint import (
+    DurabilityConfig,
+    checkpoint_path,
+    latest_checkpoint,
+    load_checkpoint,
+    prune_checkpoints,
+    save_checkpoint,
+)
+from .faults import FaultPlan, FaultPolicy, InjectedCrash
+from .wal import WriteAheadLog
 
 
 @dataclasses.dataclass
@@ -106,6 +134,20 @@ class EpochSnapshot:
         return int(self.src_idx.shape[0])
 
 
+@dataclasses.dataclass(frozen=True)
+class PoisonedBatch:
+    """One quarantined batch: failed every ingest attempt under a
+    ``FaultPolicy(on_failure="quarantine")`` runtime. The data is kept so
+    the operator can inspect/re-``submit`` it; ``seq`` is its WAL ordinal
+    (-1 when the runtime is not durable)."""
+
+    seq: int
+    points: np.ndarray
+    cats: Optional[np.ndarray]
+    attempts: int
+    error: BaseException
+
+
 _STOP = object()  # worker shutdown sentinel
 
 _log = logging.getLogger("repro.serve.diversity")
@@ -134,6 +176,9 @@ class StreamRuntime:
         max_pending: int = 64,
         on_publish: Optional[Callable[[EpochSnapshot], None]] = None,
         registry: Optional[obs.MetricsRegistry] = None,
+        durability: Optional[Union[DurabilityConfig, str]] = None,
+        fault_policy: Optional[FaultPolicy] = None,
+        faults: Optional[FaultPlan] = None,
     ):
         if spec.kind == "general" and oracle is None:
             raise ValueError("general matroid service needs a host oracle")
@@ -185,6 +230,32 @@ class StreamRuntime:
         self._worker_err: Optional[BaseException] = None
         self._pending = 0  # submitted batches not yet fully ingested
         self._closed = False
+        self._force_stop = False  # close(drain=False): drop, don't ingest
+        # --- fault tolerance (durability + supervised worker) ---
+        self.fault_policy = (
+            fault_policy if fault_policy is not None else FaultPolicy()
+        )
+        self.faults = faults
+        # epoch timestamps and staleness all read one clock, so an
+        # injected clock skew shifts every stamp coherently instead of
+        # tearing publish-vs-submit deltas (wait deadlines stay on the
+        # real clock)
+        self._clock = (
+            faults.monotonic if faults is not None else time.monotonic
+        )
+        if isinstance(durability, str):
+            durability = DurabilityConfig(dir=durability)
+        self.durability = durability
+        self._wal: Optional[WriteAheadLog] = None
+        self._next_seq = 0  # next submission ordinal to assign
+        self._applied_seq = -1  # newest seq folded into the scan state
+        self._last_ckpt_seq = -1  # _applied_seq at the last checkpoint
+        self._poisoned_seqs: list[int] = []  # skipped on WAL replay
+        self._replaying = False  # restore() replay: don't re-append
+        self._inflight = None  # batch a crashed worker must re-apply first
+        self._worker_restarts = 0
+        self.poison: list[PoisonedBatch] = []
+        self.restore_report: Optional[dict] = None
         # --- observability (repro.obs; see README "Observability") ---
         # submit times of worker-ingested batches awaiting an epoch: the
         # publish drains it into the staleness histogram (publish time -
@@ -215,6 +286,21 @@ class StreamRuntime:
         self._m_callback_errors = reg.counter(
             "serve.publish.callback_errors"
         )
+        self._m_worker_retries = reg.counter("serve.worker.retries")
+        self._m_worker_poisoned = reg.counter("serve.worker.poisoned")
+        self._m_worker_crashes = reg.counter("serve.worker.crashes")
+        self._m_worker_restarts = reg.counter("serve.worker.restarts")
+        self._m_ckpt_saved = reg.counter("serve.ckpt.saved")
+        self._m_ckpt_failures = reg.counter("serve.ckpt.failures")
+        self._m_ckpt_last_seq = reg.gauge("serve.ckpt.last_seq")
+        if self.durability is not None:
+            os.makedirs(self.durability.dir, exist_ok=True)
+            self._wal = WriteAheadLog(
+                self.durability.wal_path,
+                fsync=self.durability.fsync,
+                faults=self.faults,
+                registry=reg,
+            )
 
     # ------------------------------------------------------------------
     # synchronous ingestion (the scan itself)
@@ -320,12 +406,21 @@ class StreamRuntime:
         Thread-safe (the async worker calls this too); does NOT publish an
         epoch — publication happens in ``refresh``/``flush`` or on the
         worker's drain cadence.
+
+        On a durable runtime (``durability=``) this entry point write-ahead
+        logs the batch before applying it (``submit`` logs at enqueue time
+        instead); calling ``ingest_sharded``/``ingest_pipeline`` directly
+        bypasses the log.
         """
         with self._cv:
+            seq = self._wal_begin(points, cats)
             if self.num_shards > 1:
                 if self.placement == "pipeline":
-                    return self.ingest_pipeline(points, cats, pad_to=pad_to)
-                return self.ingest_sharded(points, cats, pad_to=pad_to)
+                    rep = self.ingest_pipeline(points, cats, pad_to=pad_to)
+                else:
+                    rep = self.ingest_sharded(points, cats, pad_to=pad_to)
+                self._wal_commit(seq)
+                return rep
             t0 = time.perf_counter()
             pts = np.asarray(points, np.float32)
             n, d = pts.shape
@@ -367,7 +462,50 @@ class StreamRuntime:
                     block_size=self.block_size,
                 )
             self.n_offered += n
-            return self._report(n, t0)
+            rep = self._report(n, t0)
+            self._wal_commit(seq)
+            return rep
+
+    def _wal_begin(
+        self, points: np.ndarray, cats: Optional[np.ndarray]
+    ) -> Optional[int]:
+        """Assign a submission ordinal and write-ahead log one externally
+        originated synchronous batch (under ``_cv``). Returns ``None`` for
+        non-durable runtimes and for internal applications (the async
+        worker's — logged at submit time — and restore's replay); raises
+        ``WalError`` (batch NOT applied, seq burned) if the append fails.
+        """
+        if self._wal is None or self._replaying:
+            return None
+        if (
+            self._worker is not None
+            and threading.current_thread() is self._worker
+        ):
+            return None
+        pts = np.asarray(points, np.float32)
+        if pts.shape[0] == 0:
+            return None  # warmup no-op batches don't advance the stream
+        if self._pending > 0:
+            # interleaving a sync ingest between in-flight async batches
+            # would apply it out of submission order — the WAL could no
+            # longer replay to the same stream, so refuse loudly
+            raise RuntimeError(
+                "durable runtime: synchronous ingest while async batches "
+                "are pending would break WAL replay order; flush() first "
+                "or submit() this batch"
+            )
+        seq = self._next_seq
+        self._next_seq += 1
+        self._wal.append(seq, pts, cats)
+        return seq
+
+    def _wal_commit(self, seq: Optional[int]) -> None:
+        """Mark one ``_wal_begin``-logged batch as applied (under
+        ``_cv``) and checkpoint if the cadence says so."""
+        if seq is None:
+            return
+        self._applied_seq = seq
+        self.checkpoint(force=False)
 
     def ingest_sharded(
         self,
@@ -637,7 +775,7 @@ class StreamRuntime:
                 return pub
             if not changed and not force:
                 return pub
-            now = time.monotonic()
+            now = self._clock()
             with obs.span(
                 "publish", cat="ingest",
                 force=force, materialize=changed,
@@ -667,7 +805,8 @@ class StreamRuntime:
             self._m_publish_s.observe(time.perf_counter() - t0)
             # every worker-ingested batch awaiting an epoch is now covered
             # by this publish: its staleness is publish time - submit time
-            t_pub = time.monotonic()
+            # (same clock as the submit stamp, so injected skew cancels)
+            t_pub = self._clock()
             for t_submit in self._stale_pending:
                 self._m_staleness_s.observe(t_pub - t_submit)
             self._stale_pending.clear()
@@ -763,6 +902,12 @@ class StreamRuntime:
         synchronous ``ingest`` calls. Blocks only when ``max_pending``
         batches are already queued (backpressure). Worker errors surface
         on the next ``submit``/``flush``.
+
+        On a durable runtime the batch is appended to the write-ahead log
+        *before* it is enqueued: once ``submit`` returns, the batch
+        survives a process death (``restore`` replays it). A failed
+        append raises ``WalError`` here, in the submitter — the batch was
+        neither persisted nor enqueued.
         """
         pts = np.asarray(points, np.float32)
         with obs.trace() as tid, obs.span(
@@ -772,63 +917,130 @@ class StreamRuntime:
                 self._raise_worker_error()
                 if self._closed:
                     raise RuntimeError("runtime is closed")
-                if self._worker is None:
-                    self._worker = threading.Thread(
-                        target=self._worker_loop,
-                        name="stream-runtime-ingest",
-                        daemon=True,
-                    )
-                    self._worker.start()
+                seq = -1
+                if self._wal is not None:
+                    # log-then-enqueue: a WalError propagates to the
+                    # caller with the batch not enqueued (the burned seq
+                    # leaves a harmless gap in the log)
+                    seq = self._next_seq
+                    self._next_seq += 1
+                    self._wal.append(seq, pts, cats)
+                self._ensure_worker()
                 self._pending += 1
                 self._m_submitted.inc()
             # queue items carry submit time (the staleness clock) and the
             # submitter's trace ID (the worker resumes it, so one trace
             # covers submit -> ingest -> publish across threads)
-            self._queue.put((pts, cats, time.monotonic(), tid))
+            self._queue.put((pts, cats, seq, self._clock(), tid))
             self._m_queue_depth.set(self._queue.qsize())
 
-    def _drop_pending_item(self, err: BaseException) -> None:
-        self._m_worker_errors.inc()
+    def _ensure_worker(self) -> None:
+        """Start (or, defensively, respawn) the ingest worker. Caller
+        holds ``_cv``. Normal crash recovery happens in ``_worker_main``'s
+        supervisor; this only catches a worker that died without it."""
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(
+                target=self._worker_main,
+                name="stream-runtime-ingest",
+                daemon=True,
+            )
+            self._worker.start()
+
+    def _drop_pending_item(self, reason: str) -> None:
+        """Account one submitted batch that will never be ingested:
+        ``reason="truncated"`` (a batch after the stream-truncating
+        failure) or ``reason="close"`` (forced ``close(drain=False)``).
+        Drops are NOT worker errors — ``serve.worker.errors`` counts each
+        failure exactly once, where it happens."""
+        self.registry.counter(
+            "serve.worker.dropped_batches", reason=reason
+        ).inc()
         with self._cv:
-            if self._worker_err is None:
-                self._worker_err = err
             self._pending -= 1
             self._cv.notify_all()
 
+    def _worker_main(self) -> None:
+        """Worker thread entry: the ingest loop under a supervisor.
+
+        A loop-fatal error (e.g. an injected ``InjectedCrash``) kills
+        this thread — the supervisor respawns a replacement (bounded by
+        ``fault_policy.max_worker_restarts``) that first re-applies the
+        in-flight batch the dead worker was holding, preserving
+        submission order exactly.
+        """
+        try:
+            self._worker_loop()
+        except BaseException as e:  # noqa: BLE001 — supervisor boundary
+            self._m_worker_crashes.inc()
+            _log.warning(
+                "ingest worker crashed (%s: %s)", type(e).__name__, e
+            )
+            with self._cv:
+                policy = self.fault_policy
+                if (
+                    self._closed
+                    or self._worker_restarts >= policy.max_worker_restarts
+                ):
+                    if self._worker_err is None:
+                        self._m_worker_errors.inc()
+                        self._worker_err = e
+                    self._cv.notify_all()
+                    return
+                self._worker_restarts += 1
+                self._m_worker_restarts.inc()
+                self._worker = threading.Thread(
+                    target=self._worker_main,
+                    name="stream-runtime-ingest",
+                    daemon=True,
+                )
+                self._worker.start()
+
     def _worker_loop(self) -> None:
         while True:
-            item = self._queue.get()
-            if item is _STOP:
-                # drain any batch that raced a concurrent close() past the
-                # sentinel: it will never be ingested — record that and
-                # unblock flush() waiters instead of hanging them
-                while True:
-                    try:
-                        nxt = self._queue.get(timeout=0.1)
-                    except queue.Empty:
-                        return
-                    if nxt is not _STOP:
-                        self._drop_pending_item(RuntimeError(
-                            "batch submitted concurrently with close() "
-                            "was dropped"
-                        ))
-            pts, cats, t_submit, tid = item
+            if self._inflight is not None:
+                # a restarted worker re-applies its predecessor's
+                # in-flight batch before touching the queue: order holds
+                item = self._inflight
+            else:
+                item = self._queue.get()
+                if item is _STOP:
+                    self._drain_after_stop()
+                    return
+                self._inflight = item
+            pts, cats, seq, t_submit, tid = item
             self._m_queue_depth.set(self._queue.qsize())
+            if self._force_stop:
+                # forced close: accepted-but-unqueued work is dropped,
+                # recorded BEFORE the pending count moves so a racing
+                # flush() can never see a "clean" drain (on a durable
+                # runtime the batches are in the WAL and restore replays
+                # them)
+                with self._cv:
+                    if self._worker_err is None:
+                        self._worker_err = RuntimeError(
+                            "close(drain=False) dropped queued batch(es) "
+                            "without ingesting them (see serve.worker."
+                            "dropped_batches{reason=close})"
+                        )
+                self._inflight = None
+                self._drop_pending_item("close")
+                continue
+            if self.faults is not None:
+                # loop-fatal injection site: _inflight already holds the
+                # batch, so the supervised restart replays it in order
+                self.faults.check("worker.loop")
             if self._worker_err is not None:
-                # after a failed batch the stream truncates there: later
-                # batches are dropped (not ingested out of order), so the
-                # error surfaced to callers tells the truth — everything
-                # after the failure needs re-submitting
-                self._drop_pending_item(self._worker_err)
+                # after a stream-truncating failure later batches are
+                # dropped (not ingested out of order), so the error
+                # surfaced to callers tells the truth — everything after
+                # the failure needs re-submitting
+                self._inflight = None
+                self._drop_pending_item("truncated")
                 continue
             with obs.resume_trace(tid):
-                try:
-                    with obs.span(
-                        "worker_ingest", cat="ingest", n=int(pts.shape[0])
-                    ):
-                        self.ingest(pts, cats)
-                except BaseException as e:  # noqa: BLE001 — surfaced to callers
-                    self._drop_pending_item(e)
+                ok = self._ingest_with_retry(pts, cats, seq)
+                self._inflight = None
+                if not ok:
                     continue
                 with self._cv:
                     self._pending -= 1
@@ -845,8 +1057,93 @@ class StreamRuntime:
                     except BaseException as e:  # noqa: BLE001
                         with self._cv:
                             if self._worker_err is None:
+                                self._m_worker_errors.inc()
                                 self._worker_err = e
                             self._cv.notify_all()
+                self.checkpoint(force=False)
+
+    def _drain_after_stop(self) -> None:
+        """Drain batches racing (or force-dropped by) ``close``: they
+        will never be ingested — account them and unblock waiters
+        instead of hanging them, and leave a truthful error for any
+        later ``flush``/``acquire``."""
+        while True:
+            try:
+                nxt = self._queue.get(timeout=0.1)
+            except queue.Empty:
+                return
+            if nxt is not _STOP:
+                # error recorded BEFORE the pending count drops, so a
+                # concurrent flush() can never observe a "clean" drain
+                with self._cv:
+                    if self._worker_err is None:
+                        self._worker_err = RuntimeError(
+                            "close() dropped queued batch(es) without "
+                            "ingesting them (see serve.worker."
+                            "dropped_batches{reason=close})"
+                        )
+                self._drop_pending_item("close")
+
+    def _ingest_with_retry(
+        self, pts: np.ndarray, cats: Optional[np.ndarray], seq: int
+    ) -> bool:
+        """Apply one dequeued batch under the fault policy: retry
+        transient errors with capped exponential backoff, then either
+        truncate the stream (default, the historical contract) or
+        quarantine the batch to ``self.poison`` and keep going. Returns
+        True iff the batch was ingested. ``serve.worker.errors`` is
+        incremented exactly once per failed batch, never per retry and
+        never per later re-raise."""
+        policy = self.fault_policy
+        attempt = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    self.faults.check("worker.ingest")
+                with obs.span(
+                    "worker_ingest", cat="ingest", n=int(pts.shape[0]),
+                    attempt=attempt,
+                ):
+                    self.ingest(pts, cats)
+                if seq >= 0:
+                    with self._cv:
+                        self._applied_seq = seq
+                return True
+            except InjectedCrash:
+                raise  # loop-fatal by contract: the supervisor's problem
+            except Exception as e:  # noqa: BLE001 — policy boundary
+                if attempt < policy.max_retries:
+                    self._m_worker_retries.inc()
+                    time.sleep(policy.backoff(attempt))
+                    attempt += 1
+                    continue
+                self._m_worker_errors.inc()
+                if policy.on_failure == "quarantine":
+                    self._m_worker_poisoned.inc()
+                    _log.warning(
+                        "quarantining batch seq=%d after %d attempt(s): "
+                        "%s: %s — stream continues",
+                        seq, attempt + 1, type(e).__name__, e,
+                    )
+                    with self._cv:
+                        self.poison.append(PoisonedBatch(
+                            seq=seq, points=pts, cats=cats,
+                            attempts=attempt + 1, error=e,
+                        ))
+                        if seq >= 0:
+                            # the seq is consumed: a restored stream must
+                            # skip it on replay to match this live one
+                            self._poisoned_seqs.append(seq)
+                            self._applied_seq = seq
+                        self._pending -= 1
+                        self._cv.notify_all()
+                else:
+                    with self._cv:
+                        if self._worker_err is None:
+                            self._worker_err = e
+                        self._pending -= 1
+                        self._cv.notify_all()
+                return False
 
     def _raise_worker_error(self) -> None:
         if self._worker_err is not None:
@@ -874,17 +1171,322 @@ class StreamRuntime:
             self._raise_worker_error()
             return self.refresh(force=True).epoch
 
-    def close(self) -> None:
-        """Stop the async worker (idempotent). Synchronous ingestion and
-        published epochs remain usable; further ``submit`` calls raise."""
+    # ------------------------------------------------------------------
+    # durability: checkpoint + restore
+    # ------------------------------------------------------------------
+
+    def _config_dict(self) -> dict:
+        """JSON-serializable constructor config (everything but the host
+        oracle and callbacks, which ``restore`` takes as arguments)."""
+        return dict(
+            spec=dict(
+                kind=self.spec.kind,
+                num_categories=self.spec.num_categories,
+                gamma=self.spec.gamma,
+            ),
+            k=self.k,
+            tau=self.tau,
+            metric=str(self.metric),
+            caps=None if self.caps is None else [int(c) for c in self.caps],
+            slot_cap=self.slot_cap,
+            variant=self.stream_variant,
+            eps=self.eps,
+            c_const=self.c_const,
+            num_shards=self.num_shards,
+            block_size=self.block_size,
+            placement=self.placement,
+            publish_every=self.publish_every,
+            max_pending=int(self._queue.maxsize),
+        )
+
+    def _ckpt_meta(self) -> dict:
+        return dict(
+            version=1,
+            kind=(
+                "list" if isinstance(self._state, list)
+                else "stacked" if self.num_shards > 1
+                else "single"
+            ),
+            wal_seq=self._applied_seq,
+            next_seq=self._next_seq,
+            n_offered=self.n_offered,
+            rr=self._rr,
+            epoch=self.epochs_published,
+            fingerprint=self._fingerprint,
+            poisoned_seqs=list(self._poisoned_seqs),
+            config=self._config_dict(),
+        )
+
+    def checkpoint(self, *, force: bool = True) -> Optional[str]:
+        """Persist the scan state to the durability dir; returns the
+        checkpoint path, or ``None`` when skipped (no durability
+        configured, nothing ingested yet, or — with ``force=False``, the
+        worker's cadence call — fewer than ``checkpoint_every`` batches
+        applied since the last one).
+
+        A failed save (including an injected ``checkpoint.write`` fault)
+        is counted in ``serve.ckpt.failures`` and logged; serving
+        continues and the previous checkpoint stays intact (saves are
+        write-temp-then-rename). After a successful save, checkpoints
+        beyond ``keep`` are pruned and the WAL is compacted to the oldest
+        retained checkpoint's watermark.
+        """
+        dur = self.durability
+        if dur is None:
+            return None
+        with self._cv:
+            if self._state is None:
+                return None
+            if (
+                not force
+                and self._applied_seq - self._last_ckpt_seq
+                < dur.checkpoint_every
+            ):
+                return None
+            # host-materialize under the lock: the next ingest donates
+            # the live buffers, so the copy must finish before it runs
+            if isinstance(self._state, list):
+                host_state: Union[list, object] = [
+                    jax.tree_util.tree_map(np.asarray, st)
+                    for st in self._state
+                ]
+            else:
+                host_state = jax.tree_util.tree_map(
+                    np.asarray, self._state
+                )
+            meta = self._ckpt_meta()
+            path = checkpoint_path(
+                dur.dir, self.n_offered, self._fingerprint
+            )
+            wal_seq = self._applied_seq
+        try:
+            save_checkpoint(
+                path, host_state, meta,
+                faults=self.faults, fsync=dur.fsync,
+            )
+        except Exception as e:  # noqa: BLE001 — counted, serving continues
+            self._m_ckpt_failures.inc()
+            _log.warning(
+                "checkpoint save failed (%s: %s); serving continues on "
+                "the previous checkpoint + WAL",
+                type(e).__name__, e,
+            )
+            return None
+        with self._cv:
+            self._last_ckpt_seq = max(self._last_ckpt_seq, wal_seq)
+        self._m_ckpt_saved.inc()
+        self._m_ckpt_last_seq.set(wal_seq)
+        floor = prune_checkpoints(dur.dir, dur.keep)
+        if self._wal is not None and floor >= 0:
+            self._wal.compact(floor)
+        return path
+
+    @classmethod
+    def restore(
+        cls,
+        durability: Union[DurabilityConfig, str],
+        *,
+        spec: Optional[MatroidSpec] = None,
+        oracle=None,
+        on_publish: Optional[Callable[[EpochSnapshot], None]] = None,
+        registry: Optional[obs.MetricsRegistry] = None,
+        durability_out: Optional[Union[DurabilityConfig, str]] = None,
+        fault_policy: Optional[FaultPolicy] = None,
+        faults: Optional[FaultPlan] = None,
+        **overrides,
+    ) -> "StreamRuntime":
+        """Rebuild a runtime from its durability dir: load the newest
+        valid checkpoint, then replay the WAL tail in submission order —
+        the restored stream is bit-identical to the one that died
+        (§3: the state is a pure fold over the batch sequence, and the
+        scan is deterministic given the same config).
+
+        The constructor config is read from the checkpoint; ``spec`` and
+        keyword ``overrides`` (``k=``, ``tau=``, ...) take precedence and
+        are *required* when no checkpoint exists yet (WAL-only restore).
+        Host oracles and callbacks are not serializable — pass them
+        again. Batches quarantined before the checkpoint are skipped on
+        replay (matching the live post-quarantine stream); quarantined
+        batches *newer* than the checkpoint are re-attempted (the failure
+        was transient by definition — at-least-once, in order).
+
+        The outcome is summarized in ``runtime.restore_report``
+        (checkpoint path, replayed batches/points, wall time, recovered
+        epoch fingerprint).
+        """
+        dur = (
+            DurabilityConfig(dir=durability)
+            if isinstance(durability, str) else durability
+        )
+        t0 = time.perf_counter()
+        path = latest_checkpoint(dur.dir)
+        state = None
+        meta: Optional[dict] = None
+        cfg: dict = {}
+        if path is not None:
+            state, meta = load_checkpoint(path)
+            cfg = dict(meta["config"])
+        if spec is None:
+            if "spec" not in cfg:
+                raise ValueError(
+                    "no checkpoint to read the config from: WAL-only "
+                    "restore needs spec= plus k=/tau=/... overrides"
+                )
+            spec = MatroidSpec(**cfg["spec"])
+        kw = dict(
+            k=cfg.get("k"),
+            tau=cfg.get("tau"),
+            metric=cfg.get("metric", "euclidean"),
+            caps=cfg.get("caps"),
+            slot_cap=cfg.get("slot_cap"),
+            variant=cfg.get("variant", "radius"),
+            eps=cfg.get("eps", 0.5),
+            c_const=cfg.get("c_const", 32),
+            num_shards=cfg.get("num_shards", 1),
+            block_size=cfg.get("block_size", 128),
+            placement=cfg.get("placement", "auto"),
+            publish_every=cfg.get("publish_every", 8),
+            max_pending=cfg.get("max_pending", 64),
+        )
+        kw.update(overrides)
+        k = kw.pop("k")
+        if k is None or kw["tau"] is None:
+            raise ValueError(
+                "no checkpoint to read the config from: WAL-only restore "
+                "needs k= and tau= overrides"
+            )
+        caps = kw.pop("caps")
+        rt = cls(
+            spec, int(k),
+            caps=None if caps is None else np.asarray(caps, np.int32),
+            oracle=oracle, on_publish=on_publish, registry=registry,
+            durability=dur, fault_policy=fault_policy, faults=faults,
+            **kw,
+        )
+        if meta is not None:
+            with rt._cv:
+                if meta["kind"] == "list":
+                    devs = jax.devices()
+                    rt._state = [
+                        jax.device_put(st, devs[i % len(devs)])
+                        for i, st in enumerate(state)
+                    ]
+                    rt._fp_cache = None
+                else:
+                    rt._state = jax.tree_util.tree_map(jnp.asarray, state)
+                rt.n_offered = int(meta["n_offered"])
+                rt._rr = int(meta.get("rr", 0))
+                rt.epochs_published = int(meta.get("epoch", 0))
+                rt._next_seq = int(meta["next_seq"])
+                rt._applied_seq = int(meta["wal_seq"])
+                rt._last_ckpt_seq = rt._applied_seq
+                rt._poisoned_seqs = [
+                    int(s) for s in meta.get("poisoned_seqs", ())
+                ]
+                rt._fingerprint, rt._coreset_size = (
+                    rt._fingerprint_and_size()
+                )
+                rt._dirty = True
+        # replay the WAL tail: records newer than the checkpoint's
+        # watermark, in file order == submission order
+        replayed = 0
+        replayed_points = 0
+        skipped = 0
+        poisoned = set(rt._poisoned_seqs)
+        rt._replaying = True
+        try:
+            for rec in rt._wal.replay(after_seq=rt._applied_seq):
+                with rt._cv:
+                    rt._next_seq = max(rt._next_seq, rec.seq + 1)
+                    rt._applied_seq = rec.seq
+                if rec.seq in poisoned:
+                    skipped += 1
+                    continue
+                try:
+                    rt.ingest(rec.points, rec.cats)
+                except Exception as e:  # noqa: BLE001 — skip + count
+                    rt.registry.counter("serve.wal.replay_errors").inc()
+                    _log.warning(
+                        "WAL replay of seq %d failed (%s: %s); skipped",
+                        rec.seq, type(e).__name__, e,
+                    )
+                    continue
+                replayed += 1
+                replayed_points += int(rec.points.shape[0])
+        finally:
+            rt._replaying = False
+        snap = rt.refresh(force=True) if rt._state is not None else None
+        rt.restore_report = dict(
+            checkpoint=path,
+            replayed_batches=replayed,
+            replayed_points=replayed_points,
+            skipped_poisoned=skipped,
+            restore_s=time.perf_counter() - t0,
+            epoch=0 if snap is None else snap.epoch,
+            fingerprint=None if snap is None else snap.fingerprint,
+            n_offered=rt.n_offered,
+        )
+        return rt
+
+    def close(
+        self, *, drain: bool = True, timeout: Optional[float] = 30.0
+    ) -> None:
+        """Stop the async worker (idempotent).
+
+        ``drain=True`` (default) first waits — up to ``timeout`` seconds
+        — for every already-submitted batch to be ingested, so close
+        never silently discards accepted work; on expiry it raises
+        ``TimeoutError`` *without* closing (retry, or force with
+        ``close(drain=False)``). ``drain=False`` stops immediately:
+        still-queued batches are dropped, counted in
+        ``serve.worker.dropped_batches{reason=close}``, and surfaced as
+        a worker error to any later ``flush``/``acquire`` — they were
+        accepted but never ingested (on a durable runtime they are in
+        the WAL and come back on ``restore``).
+
+        Synchronous ingestion and published epochs remain usable after
+        close; further ``submit`` calls raise ``RuntimeError``.
+        """
+        if drain:
+            deadline = (
+                None if timeout is None else time.monotonic() + timeout
+            )
+            with self._cv:
+                while (
+                    not self._closed
+                    and self._pending > 0
+                    and self._worker_err is None
+                ):
+                    remaining = (
+                        None if deadline is None
+                        else deadline - time.monotonic()
+                    )
+                    if remaining is not None and remaining <= 0:
+                        raise TimeoutError(
+                            f"close(drain=True) timed out with "
+                            f"{self._pending} batch(es) pending; retry, "
+                            f"or force-drop with close(drain=False)"
+                        )
+                    self._cv.wait(remaining)
         with self._cv:
             if self._closed:
                 return
             self._closed = True
+            if not drain:
+                self._force_stop = True
             worker = self._worker
         if worker is not None:
             self._queue.put(_STOP)
             worker.join(timeout=60.0)
+        if (
+            self.durability is not None
+            and self._applied_seq > self._last_ckpt_seq
+        ):
+            # parting save: a cleanly closed durable runtime restores
+            # from its checkpoint alone, no config overrides needed
+            self.checkpoint(force=True)
+        if self._wal is not None:
+            self._wal.close()
 
     def __enter__(self) -> "StreamRuntime":
         return self

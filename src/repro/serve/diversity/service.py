@@ -76,32 +76,77 @@ class DiversityService:
         block_size: int = 128,
         placement: str = "auto",
         registry=None,
+        durability=None,
+        fault_policy=None,
+        faults=None,
     ):
-        self.runtime = StreamRuntime(
-            spec, k,
-            tau=tau, metric=metric, caps=caps, slot_cap=slot_cap,
-            variant=variant, eps=eps, c_const=c_const, oracle=oracle,
-            num_shards=num_shards, block_size=block_size,
-            placement=placement, registry=registry,
+        self._wire(
+            StreamRuntime(
+                spec, k,
+                tau=tau, metric=metric, caps=caps, slot_cap=slot_cap,
+                variant=variant, eps=eps, c_const=c_const, oracle=oracle,
+                num_shards=num_shards, block_size=block_size,
+                placement=placement, registry=registry,
+                durability=durability, fault_policy=fault_policy,
+                faults=faults,
+            ),
+            cache=cache,
+            registry=registry,
         )
+
+    def _wire(self, runtime: StreamRuntime, *, cache=None, registry=None):
+        self.runtime = runtime
         self.frontend = QueryFrontend(
-            self.runtime, cache=cache, registry=registry
+            runtime, cache=cache, registry=registry
         )
         self.cache = self.frontend.cache
         self.cache_key = self.frontend.default_tenant.key
-        self.spec = spec
-        self.k = int(k)
-        self.tau = int(tau)
-        self.metric = metric
-        self.caps = self.runtime.caps
-        self.slot_cap = slot_cap
-        self.stream_variant = variant
-        self.eps = float(eps)
-        self.c_const = int(c_const)
-        self.oracle = oracle
-        self.num_shards = int(num_shards)
-        self.block_size = int(block_size)
-        self.placement = self.runtime.placement
+        self.spec = runtime.spec
+        self.k = runtime.k
+        self.tau = runtime.tau
+        self.metric = runtime.metric
+        self.caps = runtime.caps
+        self.slot_cap = runtime.slot_cap
+        self.stream_variant = runtime.stream_variant
+        self.eps = runtime.eps
+        self.c_const = runtime.c_const
+        self.oracle = runtime.oracle
+        self.num_shards = runtime.num_shards
+        self.block_size = runtime.block_size
+        self.placement = runtime.placement
+        return self
+
+    @classmethod
+    def from_runtime(
+        cls, runtime: StreamRuntime, *, cache=None, registry=None
+    ) -> "DiversityService":
+        """Wrap an existing runtime (e.g. one built by
+        ``StreamRuntime.restore``) in the single-tenant façade without
+        constructing a new stream."""
+        svc = cls.__new__(cls)
+        return svc._wire(runtime, cache=cache, registry=registry)
+
+    @classmethod
+    def restore(
+        cls,
+        durability,
+        *,
+        oracle=None,
+        cache=None,
+        registry=None,
+        fault_policy=None,
+        faults=None,
+        **overrides,
+    ) -> "DiversityService":
+        """Rebuild a service from its durability dir: newest checkpoint
+        + WAL-tail replay, bit-identical to the stream that died (see
+        ``StreamRuntime.restore``; the report is at
+        ``svc.runtime.restore_report``)."""
+        rt = StreamRuntime.restore(
+            durability, oracle=oracle, registry=registry,
+            fault_policy=fault_policy, faults=faults, **overrides,
+        )
+        return cls.from_runtime(rt, cache=cache, registry=registry)
 
     # ------------------------------------------------------------------
     # ingestion (delegated to the runtime's synchronous path)
@@ -241,7 +286,13 @@ class DiversityService:
     # queries (delegated to the frontend's default tenant)
     # ------------------------------------------------------------------
 
-    def query(self, q: DiversityQuery, *, engine: str = "auto") -> QueryResult:
+    def query(
+        self,
+        q: DiversityQuery,
+        *,
+        engine: str = "auto",
+        deadline_s: Optional[float] = None,
+    ) -> QueryResult:
         """Answer one query on the cached coreset matrix.
 
         The default ``engine="auto"`` (same default as ``query_batch``)
@@ -250,17 +301,26 @@ class DiversityService:
         equals the host engine's, which in turn equals ``solve_dmmc`` on
         the same coreset. ``engine="host"`` forces the reference solver
         (bit-identical selection order to the offline driver); any
-        registered engine name forces that engine.
+        registered engine name forces that engine. ``deadline_s`` arms
+        deadline-aware admission (degrade/shed; see
+        ``QueryFrontend.query_batch``).
         """
-        return self.frontend.query(q, engine=engine)
+        return self.frontend.query(q, engine=engine, deadline_s=deadline_s)
 
     def query_batch(
-        self, queries: Sequence[DiversityQuery], *, engine: str = "auto"
+        self,
+        queries: Sequence[DiversityQuery],
+        *,
+        engine: str = "auto",
+        deadline_s: Optional[float] = None,
     ) -> list[QueryResult]:
         """Answer a batch of heterogeneous queries against ONE cache entry
-        (see ``QueryFrontend.query_batch`` for the engine semantics; the
-        façade always queries the default tenant at the newest epoch)."""
-        return self.frontend.query_batch(queries, engine=engine)
+        (see ``QueryFrontend.query_batch`` for the engine and deadline
+        semantics; the façade always queries the default tenant at the
+        newest epoch)."""
+        return self.frontend.query_batch(
+            queries, engine=engine, deadline_s=deadline_s
+        )
 
     def close(self) -> None:
         """Stop the runtime's async worker, if one was started."""

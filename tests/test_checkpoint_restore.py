@@ -1,0 +1,261 @@
+"""Restore parity: checkpoint -> kill -> restore -> WAL replay yields a
+stream bit-identical to the uninterrupted run — coreset buffers, epoch
+fingerprint, and query answers — across all placement drives, through a
+mid-shrink checkpoint, and from the WAL alone.
+
+The guarantee is the paper's §3 composability made operational: a
+``StreamState`` is a pure fold over the batch sequence under a
+deterministic scan, so (serialized state) + (replayed tail, in
+submission order) IS the state the dead process would have reached.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from conftest import make_clustered_points
+from repro.core.matroid import MatroidSpec
+from repro.serve.diversity import (
+    DiversityQuery,
+    DiversityService,
+    DurabilityConfig,
+    StreamRuntime,
+    WriteAheadLog,
+    latest_checkpoint,
+    list_checkpoints,
+)
+
+PLACEMENTS = [
+    ("vmap", 1),  # resolves to the single-shard scan
+    ("vmap", 4),
+    ("shard_map", 4),
+    ("pipeline", 4),
+]
+
+
+def _instance(rng, n=400, h=4, k=4):
+    P = make_clustered_points(rng, n=n)
+    cats = rng.integers(0, h, (n, 1)).astype(np.int32)
+    caps = np.full(h, 2, np.int32)
+    spec = MatroidSpec("partition", num_categories=h, gamma=1)
+    return P, cats, caps, spec, k
+
+
+def _batches(P, cats, size):
+    return [
+        (P[off:off + size], cats[off:off + size])
+        for off in range(0, P.shape[0], size)
+    ]
+
+
+def _assert_state_equal(a, b):
+    """Bit-identical scan state(s): every field of every shard."""
+    if isinstance(a, list):
+        assert isinstance(b, list) and len(a) == len(b)
+        for sa, sb in zip(a, b):
+            _assert_state_equal(sa, sb)
+        return
+    for f in a._fields:
+        assert np.array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        ), f
+
+
+@pytest.mark.parametrize("placement,num_shards", PLACEMENTS)
+def test_restore_is_bit_identical_across_placements(
+    rng, tmp_path, placement, num_shards
+):
+    """Durable async run with a mid-stream checkpoint, abandoned without
+    close() (the 'kill'); restore must replay the WAL tail to the exact
+    pre-kill stream, matching the uninterrupted synchronous run."""
+    P, cats, caps, spec, k = _instance(rng)
+    batches = _batches(P, cats, 50)
+    dur = DurabilityConfig(dir=str(tmp_path), checkpoint_every=10 ** 9)
+    rt = StreamRuntime(
+        spec, k, tau=12, caps=caps, block_size=32,
+        num_shards=num_shards, placement=placement, durability=dur,
+    )
+    half = len(batches) // 2
+    for pts, cs in batches[:half]:
+        rt.submit(pts, cs)
+    rt.flush()
+    assert rt.checkpoint(force=True) is not None
+    for pts, cs in batches[half:]:
+        rt.submit(pts, cs)
+    rt.flush()
+    live = rt.latest()
+    # "kill": no close(), no final checkpoint — the WAL tail holds the
+    # second half of the stream
+    restored = StreamRuntime.restore(str(tmp_path))
+    rep = restored.restore_report
+    assert rep["checkpoint"] is not None
+    assert rep["replayed_batches"] == len(batches) - half
+    got = restored.latest()
+    assert got.fingerprint == live.fingerprint
+    assert restored.n_offered == rt.n_offered == P.shape[0]
+    assert np.array_equal(got.points, live.points)
+    assert np.array_equal(got.cats, live.cats)
+    assert np.array_equal(got.src_idx, live.src_idx)
+    _assert_state_equal(restored.state, rt.state)
+    # ... and both match the uninterrupted synchronous reference
+    ref = StreamRuntime(
+        spec, k, tau=12, caps=caps, block_size=32,
+        num_shards=num_shards, placement=placement,
+    )
+    for pts, cs in batches:
+        ref.ingest(pts, cs)
+    assert ref.refresh(force=True).fingerprint == got.fingerprint
+    _assert_state_equal(restored.state, ref.state)
+    restored.close()
+    ref.close()
+
+
+def test_restore_preserves_query_answers(rng, tmp_path):
+    """Same coreset -> same answers: queries on the restored service are
+    bit-identical to the uninterrupted one's."""
+    P, cats, caps, spec, k = _instance(rng)
+    svc = DiversityService(
+        spec, k, tau=12, caps=caps, block_size=32,
+        durability=str(tmp_path),
+    )
+    for pts, cs in _batches(P, cats, 80):
+        svc.ingest(pts, cs)
+    ref_sum = svc.query(DiversityQuery(k=k))
+    ref_star = svc.query(DiversityQuery(k=3, variant="star"))
+    svc.close()
+    back = DiversityService.restore(str(tmp_path))
+    assert back.runtime.restore_report["fingerprint"] is not None
+    got_sum = back.query(DiversityQuery(k=k))
+    got_star = back.query(DiversityQuery(k=3, variant="star"))
+    assert got_sum.indices.tolist() == ref_sum.indices.tolist()
+    assert got_sum.diversity == ref_sum.diversity
+    assert got_star.indices.tolist() == ref_star.indices.tolist()
+    assert got_star.diversity == ref_star.diversity
+    back.close()
+
+
+def test_mid_shrink_checkpoint_restores_exactly(rng, tmp_path):
+    """tau small enough that the scan shrinks (R doubles) repeatedly;
+    a checkpoint after EVERY batch means the newest one lands mid-shrink
+    wherever the shrink happens — restore parity must hold anyway."""
+    P, cats, caps, spec, k = _instance(rng, n=600)
+    batches = _batches(P, cats, 40)
+    dur = DurabilityConfig(dir=str(tmp_path), checkpoint_every=1, keep=2)
+    rt = StreamRuntime(
+        spec, k, tau=8, caps=caps, block_size=32, durability=dur,
+    )
+    for pts, cs in batches:
+        rt.ingest(pts, cs)
+    live = rt.refresh(force=True)
+    assert len(list_checkpoints(str(tmp_path))) <= 2  # keep= pruned
+    restored = StreamRuntime.restore(str(tmp_path))
+    got = restored.latest()
+    assert got.fingerprint == live.fingerprint
+    assert np.array_equal(got.points, live.points)
+    _assert_state_equal(restored.state, rt.state)
+    restored.close()
+    rt.close()
+
+
+def test_wal_only_restore_replays_the_whole_stream(rng, tmp_path):
+    """No checkpoint ever taken: restore rebuilds the stream from the
+    WAL alone, given the constructor config as overrides."""
+    P, cats, caps, spec, k = _instance(rng, n=200)
+    dur = DurabilityConfig(dir=str(tmp_path), checkpoint_every=10 ** 9)
+    rt = StreamRuntime(
+        spec, k, tau=12, caps=caps, block_size=32, durability=dur,
+    )
+    for pts, cs in _batches(P, cats, 50):
+        rt.submit(pts, cs)
+    rt.flush()
+    live = rt.latest()
+    assert latest_checkpoint(str(tmp_path)) is None
+    restored = StreamRuntime.restore(
+        str(tmp_path), spec=spec, k=k, tau=12, caps=caps, block_size=32,
+    )
+    assert restored.restore_report["checkpoint"] is None
+    assert restored.restore_report["replayed_batches"] == 4
+    assert restored.latest().fingerprint == live.fingerprint
+    _assert_state_equal(restored.state, rt.state)
+    restored.close()
+    # without the config, WAL-only restore must refuse loudly
+    with pytest.raises(ValueError, match="WAL-only"):
+        StreamRuntime.restore(str(tmp_path) + "-nothing-here")
+
+
+def test_wal_survives_torn_tail(rng, tmp_path):
+    """A crash mid-append leaves a torn record; replay stops cleanly at
+    the last whole record and restore still succeeds."""
+    P, cats, caps, spec, k = _instance(rng, n=150)
+    dur = DurabilityConfig(dir=str(tmp_path), checkpoint_every=10 ** 9)
+    rt = StreamRuntime(
+        spec, k, tau=12, caps=caps, block_size=32, durability=dur,
+    )
+    batches = _batches(P, cats, 50)
+    for pts, cs in batches:
+        rt.submit(pts, cs)
+    rt.flush()
+    # tear the tail: chop the last record mid-payload
+    wal_path = dur.wal_path
+    size = os.path.getsize(wal_path)
+    with open(wal_path, "r+b") as f:
+        f.truncate(size - 37)
+    restored = StreamRuntime.restore(
+        str(tmp_path), spec=spec, k=k, tau=12, caps=caps, block_size=32,
+    )
+    # the torn (last) batch is gone; everything whole replayed
+    assert restored.restore_report["replayed_batches"] == len(batches) - 1
+    assert restored.n_offered == P.shape[0] - batches[-1][0].shape[0]
+    ref = StreamRuntime(spec, k, tau=12, caps=caps, block_size=32)
+    for pts, cs in batches[:-1]:
+        ref.ingest(pts, cs)
+    assert (
+        ref.refresh(force=True).fingerprint
+        == restored.latest().fingerprint
+    )
+    restored.close()
+    ref.close()
+
+
+def test_wal_compaction_keeps_replay_correct(rng, tmp_path):
+    """Checkpoint-driven compaction drops only records the oldest
+    retained checkpoint already covers; restore stays exact."""
+    P, cats, caps, spec, k = _instance(rng)
+    dur = DurabilityConfig(dir=str(tmp_path), checkpoint_every=2, keep=2)
+    rt = StreamRuntime(
+        spec, k, tau=12, caps=caps, block_size=32, durability=dur,
+    )
+    for pts, cs in _batches(P, cats, 40):
+        rt.submit(pts, cs)
+    rt.flush()
+    live = rt.latest()
+    # cadence checkpoints ran and compacted: the log must not contain
+    # records at or below the oldest retained checkpoint's watermark
+    wal = WriteAheadLog(dur.wal_path)
+    seqs = [rec.seq for rec in wal.replay()]
+    assert len(seqs) < 10  # compaction actually dropped something
+    restored = StreamRuntime.restore(str(tmp_path))
+    assert restored.latest().fingerprint == live.fingerprint
+    _assert_state_equal(restored.state, rt.state)
+    restored.close()
+    rt.close()
+
+
+def test_sync_ingest_while_pending_refuses_on_durable_runtime(
+    rng, tmp_path
+):
+    """Interleaving sync ingest between in-flight async batches would
+    break WAL replay order — the durable runtime refuses it."""
+    P, cats, caps, spec, k = _instance(rng, n=100)
+    rt = StreamRuntime(
+        spec, k, tau=12, caps=caps, block_size=32,
+        durability=str(tmp_path),
+    )
+    # no pending batches: sync ingest on a durable runtime is fine
+    rt.ingest(P[:50], cats[:50])
+    with rt._cv:
+        rt._pending = 1  # simulate an in-flight async batch
+        with pytest.raises(RuntimeError, match="replay order"):
+            rt.ingest(P[50:], cats[50:])
+        rt._pending = 0
+    rt.close()

@@ -1,0 +1,446 @@
+"""Seeded chaos suite for the serving stack's fault-tolerance subsystem.
+
+Every fault here comes from a deterministic ``FaultPlan``: the schedule
+is a pure function of the seed and each site's hit ordinals, so the
+suite asserts *exact* post-fault state (bit-identical streams, exact
+retry/poison counts) and passes identically on every run. CI sweeps the
+seed matrix via the ``CHAOS_SEEDS`` env var (comma-separated ints).
+"""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from conftest import make_clustered_points
+from repro import obs
+from repro.core.matroid import MatroidSpec
+from repro.serve.diversity import (
+    DiversityQuery,
+    DurabilityConfig,
+    FaultPlan,
+    FaultPolicy,
+    FaultRule,
+    QueryFrontend,
+    StreamRuntime,
+    WalError,
+)
+
+SEEDS = tuple(
+    int(s) for s in os.environ.get("CHAOS_SEEDS", "101,202,303,404").split(",")
+)
+
+
+def _instance(rng, n=400, h=4, k=4):
+    P = make_clustered_points(rng, n=n)
+    cats = rng.integers(0, h, (n, 1)).astype(np.int32)
+    caps = np.full(h, 2, np.int32)
+    spec = MatroidSpec("partition", num_categories=h, gamma=1)
+    return P, cats, caps, spec, k
+
+
+def _batches(P, cats, size=50):
+    return [
+        (P[off:off + size], cats[off:off + size])
+        for off in range(0, P.shape[0], size)
+    ]
+
+
+def _make_runtime(spec, k, caps, *, registry=None, **kw):
+    return StreamRuntime(
+        spec, k, tau=12, caps=caps, block_size=32,
+        registry=registry if registry is not None else obs.MetricsRegistry(),
+        **kw,
+    )
+
+
+def _reference_fingerprint(spec, k, caps, batches):
+    ref = StreamRuntime(spec, k, tau=12, caps=caps, block_size=32)
+    for pts, cs in batches:
+        ref.ingest(pts, cs)
+    fp = ref.refresh(force=True).fingerprint
+    ref.close()
+    return fp
+
+
+# ----------------------------------------------------------------------
+# the harness itself
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fault_plan_is_deterministic(seed):
+    """Same seed -> identical fire schedule, independent of what other
+    sites see in between (per-rule generators keyed on site ordinals)."""
+    rules = [
+        FaultRule(site="a", kind="error", p=0.5, times=None),
+        FaultRule(site="b", kind="error", p=0.3, times=None, every=2),
+    ]
+    p1, p2 = FaultPlan(seed, rules), FaultPlan(seed, rules)
+    sched1, sched2 = [], []
+    for plan, out in ((p1, sched1), (p2, sched2)):
+        for i in range(200):
+            for site in ("a", "b"):
+                # plan 2 sees 3x the "b" traffic; "a"'s decision
+                # sequence must not shift (per-rule generators)
+                reps = 3 if site == "b" and plan is p2 else 1
+                for _ in range(reps):
+                    try:
+                        plan.check(site)
+                        out.append((site, i, False))
+                    except Exception:
+                        out.append((site, i, True))
+    a1 = [x for x in sched1 if x[0] == "a"]
+    a2 = [x for x in sched2 if x[0] == "a"]
+    assert a1 == a2
+    assert p1.fired("a") == p2.fired("a") > 0
+    other = FaultPlan(seed + 1, rules)
+    for i in range(200):
+        try:
+            other.check("a")
+        except Exception:
+            pass
+    # a different seed draws a different schedule (overwhelmingly)
+    assert [f["hit"] for f in other.fires()] != [
+        f["hit"] for f in p1.fires() if f["site"] == "a"
+    ]
+
+
+# ----------------------------------------------------------------------
+# supervised worker: crash -> restart -> bit-identical stream
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_worker_crash_restart_is_bit_identical(rng, seed):
+    P, cats, caps, spec, k = _instance(rng)
+    batches = _batches(P, cats)
+    reg = obs.MetricsRegistry()
+    plan = FaultPlan(seed, [
+        FaultRule(site="worker.loop", kind="crash",
+                  after=seed % 3, times=2, every=2),
+    ])
+    rt = _make_runtime(
+        spec, k, caps, registry=reg, faults=plan,
+        fault_policy=FaultPolicy(max_worker_restarts=5),
+    )
+    for pts, cs in batches:
+        rt.submit(pts, cs)
+    rt.flush()  # must not raise: the supervisor absorbed the crashes
+    fp = rt.latest().fingerprint
+    assert rt.n_offered == P.shape[0]
+    crashes = reg.counter("serve.worker.crashes").value
+    assert crashes == plan.fired("worker.loop") == 2
+    assert reg.counter("serve.worker.restarts").value == crashes
+    assert reg.counter("serve.worker.errors").value == 0
+    rt.close()
+    assert fp == _reference_fingerprint(spec, k, caps, batches)
+
+
+def test_worker_restarts_exhausted_surfaces_one_error(rng):
+    P, cats, caps, spec, k = _instance(rng, n=200)
+    reg = obs.MetricsRegistry()
+    plan = FaultPlan(0, [
+        FaultRule(site="worker.loop", kind="crash", times=None),
+    ])
+    rt = _make_runtime(
+        spec, k, caps, registry=reg, faults=plan,
+        fault_policy=FaultPolicy(max_worker_restarts=2),
+    )
+    # the storm may exhaust restarts while we are still submitting, so
+    # the error can surface on a later submit() or on the flush() —
+    # either way it is the same single failure
+    with pytest.raises(RuntimeError, match="worker failed"):
+        for pts, cs in _batches(P, cats):
+            rt.submit(pts, cs)
+        rt.flush()
+    # crash storms don't inflate the error count: exactly one failure
+    # surfaced, however many times callers re-raise it
+    assert reg.counter("serve.worker.errors").value == 1
+    assert reg.counter("serve.worker.restarts").value == 2
+    with pytest.raises(RuntimeError, match="worker failed"):
+        rt.flush()
+    assert reg.counter("serve.worker.errors").value == 1
+    rt.close()
+
+
+# ----------------------------------------------------------------------
+# retry/backoff + poison queue
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_transient_errors_retry_to_success(rng, seed):
+    P, cats, caps, spec, k = _instance(rng)
+    batches = _batches(P, cats)
+    reg = obs.MetricsRegistry()
+    plan = FaultPlan(seed, [
+        FaultRule(site="worker.ingest", kind="error",
+                  after=seed % 4, times=3, every=3),
+    ])
+    rt = _make_runtime(
+        spec, k, caps, registry=reg, faults=plan,
+        fault_policy=FaultPolicy(max_retries=3, backoff_s=0.01),
+    )
+    for pts, cs in batches:
+        rt.submit(pts, cs)
+    rt.flush()
+    fp = rt.latest().fingerprint
+    # every injected error was retried away: no failures, no truncation,
+    # and (faults fire once per attempt ordinal) retries == fires
+    assert reg.counter("serve.worker.errors").value == 0
+    assert reg.counter("serve.worker.retries").value == plan.fired(
+        "worker.ingest"
+    ) == 3
+    assert len(rt.poison) == 0
+    rt.close()
+    assert fp == _reference_fingerprint(spec, k, caps, batches)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_poison_queue_quarantines_and_stream_continues(rng, seed):
+    P, cats, caps, spec, k = _instance(rng)
+    batches = _batches(P, cats)
+    reg = obs.MetricsRegistry()
+    max_retries = 1
+    # enough consecutive fires to exhaust one batch's attempt budget:
+    # that batch quarantines, later batches must keep flowing
+    plan = FaultPlan(seed, [
+        FaultRule(site="worker.ingest", kind="error",
+                  after=2, times=max_retries + 1),
+    ])
+    rt = _make_runtime(
+        spec, k, caps, registry=reg, faults=plan,
+        fault_policy=FaultPolicy(
+            max_retries=max_retries, backoff_s=0.01,
+            on_failure="quarantine",
+        ),
+    )
+    for pts, cs in batches:
+        rt.submit(pts, cs)
+    rt.flush()  # must NOT raise: quarantine keeps the stream alive
+    assert len(rt.poison) == 1
+    bad = rt.poison[0]
+    assert bad.attempts == max_retries + 1
+    assert reg.counter("serve.worker.errors").value == 1  # once per batch
+    assert reg.counter("serve.worker.poisoned").value == 1
+    # exactly one batch's points are missing from the stream
+    assert rt.n_offered == P.shape[0] - bad.points.shape[0]
+    # parity with a reference stream that skips the poisoned batch
+    kept = [
+        b for b in batches if b[0].shape[0] != bad.points.shape[0]
+        or not np.array_equal(b[0], bad.points)
+    ]
+    assert rt.latest().fingerprint == _reference_fingerprint(
+        spec, k, caps, kept
+    )
+    # the quarantined data is intact for re-submission
+    rt.submit(bad.points, bad.cats)
+    rt.flush()
+    assert rt.n_offered == P.shape[0]
+    rt.close()
+
+
+# ----------------------------------------------------------------------
+# WAL + checkpoint fault paths
+# ----------------------------------------------------------------------
+
+def test_wal_append_failure_surfaces_to_submitter(rng, tmp_path):
+    P, cats, caps, spec, k = _instance(rng, n=150)
+    batches = _batches(P, cats)
+    reg = obs.MetricsRegistry()
+    plan = FaultPlan(0, [
+        FaultRule(site="wal.append", kind="error", after=1, times=1),
+    ])
+    rt = _make_runtime(
+        spec, k, caps, registry=reg, faults=plan,
+        durability=str(tmp_path),
+    )
+    rt.submit(*batches[0])
+    with pytest.raises(WalError, match="not durable"):
+        rt.submit(*batches[1])  # rejected at the door, not enqueued
+    rt.submit(*batches[2])  # the stream is still healthy
+    rt.flush()
+    assert reg.counter("serve.wal.append_errors").value == 1
+    assert rt.n_offered == batches[0][0].shape[0] + batches[2][0].shape[0]
+    rt.close()
+    # restore sees exactly the two accepted batches (seq gap is fine)
+    back = StreamRuntime.restore(str(tmp_path))
+    assert back.latest().fingerprint == _reference_fingerprint(
+        spec, k, caps, [batches[0], batches[2]]
+    )
+    back.close()
+
+
+def test_checkpoint_write_failure_keeps_serving(rng, tmp_path):
+    P, cats, caps, spec, k = _instance(rng, n=200)
+    reg = obs.MetricsRegistry()
+    plan = FaultPlan(0, [
+        FaultRule(site="checkpoint.write", kind="error", times=1),
+    ])
+    rt = _make_runtime(
+        spec, k, caps, registry=reg, faults=plan,
+        durability=DurabilityConfig(dir=str(tmp_path), checkpoint_every=2),
+    )
+    for pts, cs in _batches(P, cats):
+        rt.submit(pts, cs)
+    rt.flush()
+    live = rt.latest()
+    assert reg.counter("serve.ckpt.failures").value == 1
+    assert reg.counter("serve.ckpt.saved").value >= 1  # later saves OK
+    rt.close()
+    back = StreamRuntime.restore(str(tmp_path))
+    assert back.latest().fingerprint == live.fingerprint
+    back.close()
+
+
+def test_clock_skew_never_tears_staleness(rng):
+    """All epoch/staleness stamps read the plan's (skewed) clock, so a
+    skewed runtime still reports non-negative staleness and sane
+    publication ordering."""
+    P, cats, caps, spec, k = _instance(rng, n=200)
+    reg = obs.MetricsRegistry()
+    plan = FaultPlan(0, clock_skew_s=-1800.0)
+    rt = _make_runtime(spec, k, caps, registry=reg, faults=plan)
+    for pts, cs in _batches(P, cats):
+        rt.submit(pts, cs)
+    rt.flush()
+    stale = reg.histogram("serve.epoch.staleness_s")
+    assert stale.count == 4
+    assert stale.describe()["min"] >= 0.0
+    assert rt.latest().published_at < time.monotonic()  # skewed backwards
+    rt.close()
+
+
+# ----------------------------------------------------------------------
+# close(): drain-or-raise, forced drops are counted
+# ----------------------------------------------------------------------
+
+def test_close_drains_by_default_and_raises_on_timeout(rng):
+    P, cats, caps, spec, k = _instance(rng, n=300)
+    reg = obs.MetricsRegistry()
+    plan = FaultPlan(0, [
+        FaultRule(site="worker.ingest", kind="delay", delay_s=0.25,
+                  times=None),
+    ])
+    rt = _make_runtime(spec, k, caps, registry=reg, faults=plan)
+    for pts, cs in _batches(P, cats):
+        rt.submit(pts, cs)
+    with pytest.raises(TimeoutError, match="drain"):
+        rt.close(timeout=0.05)
+    assert rt.pending > 0  # NOT closed, nothing dropped
+    rt.close()  # full drain: every accepted batch lands
+    assert rt.pending == 0
+    assert rt.n_offered == P.shape[0]
+    assert reg.counter(
+        "serve.worker.dropped_batches", reason="close"
+    ).value == 0
+
+
+def test_forced_close_counts_dropped_batches(rng):
+    P, cats, caps, spec, k = _instance(rng, n=300)
+    reg = obs.MetricsRegistry()
+    plan = FaultPlan(0, [
+        FaultRule(site="worker.ingest", kind="delay", delay_s=0.25,
+                  times=None),
+    ])
+    rt = _make_runtime(spec, k, caps, registry=reg, faults=plan)
+    for pts, cs in _batches(P, cats):
+        rt.submit(pts, cs)
+    rt.close(drain=False)
+    dropped = reg.counter(
+        "serve.worker.dropped_batches", reason="close"
+    ).value
+    assert dropped > 0
+    # the drop is surfaced, not silent: flush tells the truth
+    with pytest.raises(RuntimeError, match="worker failed"):
+        rt.flush()
+    # ... and errors were not inflated per-drop
+    assert reg.counter("serve.worker.errors").value == 0
+
+
+# ----------------------------------------------------------------------
+# deadline-aware admission
+# ----------------------------------------------------------------------
+
+def _seeded_frontend(rng, reg):
+    P, cats, caps, spec, k = _instance(rng)
+    rt = _make_runtime(spec, k, caps, registry=reg)
+    rt.ingest(P, cats)
+    return QueryFrontend(rt), k
+
+
+def test_deadline_degrades_exact_to_greedy(rng):
+    reg = obs.MetricsRegistry()
+    fe, k = _seeded_frontend(rng, reg)
+    # teach the predictor that host_exhaustive blows any budget
+    reg.histogram(
+        "serve.solve.latency_s", tenant="default",
+        engine="host_exhaustive",
+    ).observe(30.0)
+    res = fe.query_batch(
+        [DiversityQuery(k=3, variant="star"),
+         DiversityQuery(k=3, variant="tree")],
+        deadline_s=1.0,
+    )
+    assert all(r.degraded and r.engine == "jit_greedy" for r in res)
+    assert all(not r.shed and len(r.indices) == 3 for r in res)
+    assert reg.counter("serve.query.degraded", tenant="default").value == 2
+    # exact queries without a deadline still run exact
+    res2 = fe.query(DiversityQuery(k=3, variant="star"))
+    assert res2.engine == "host_exhaustive" and not res2.degraded
+
+
+def test_deadline_sheds_when_nothing_fits(rng):
+    reg = obs.MetricsRegistry()
+    fe, k = _seeded_frontend(rng, reg)
+    for eng in ("host_exhaustive", "jit_greedy", "jit_sum"):
+        reg.histogram(
+            "serve.solve.latency_s", tenant="default", engine=eng,
+        ).observe(30.0)
+    res = fe.query_batch(
+        [DiversityQuery(k=k), DiversityQuery(k=3, variant="star")],
+        deadline_s=0.5,
+    )
+    assert all(r.shed and r.engine == "shed" for r in res)
+    assert all(len(r.indices) == 0 for r in res)
+    assert reg.counter("serve.query.shed", tenant="default").value == 2
+    # shedding is an answer, not an error: the frontend stays healthy
+    ok = fe.query(DiversityQuery(k=k))
+    assert not ok.shed and len(ok.indices) == k
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_saturation_burst_bounded_by_deadline(rng, seed):
+    """4x-saturation acceptance shape: under a burst of exact queries
+    with a deadline, every request completes, degrades, or sheds within
+    its budget — nothing queues unboundedly, nothing raises."""
+    reg = obs.MetricsRegistry()
+    fe, k = _seeded_frontend(rng, reg)
+    # warm the engines once so predictions exist and compiles are paid
+    fe.query_batch([
+        DiversityQuery(k=3, variant="star"),
+        DiversityQuery(k=3, variant="star", engine_hint="jit_greedy"),
+        DiversityQuery(k=k),
+    ])
+    deadline_s = 2.0
+    qrng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    outcomes = {"ok": 0, "degraded": 0, "shed": 0}
+    for _ in range(12):
+        qs = [
+            DiversityQuery(
+                k=3, variant=("star" if qrng.random() < 0.5 else "tree")
+            )
+            for _ in range(4)
+        ]
+        t1 = time.perf_counter()
+        for r in fe.query_batch(qs, deadline_s=deadline_s):
+            if r.shed:
+                outcomes["shed"] += 1
+            elif r.degraded:
+                outcomes["degraded"] += 1
+            else:
+                outcomes["ok"] += 1
+        # the per-batch wall time respects the deadline (generous slack
+        # for CI noise: the contract is "bounded", not "tight")
+        assert time.perf_counter() - t1 < deadline_s + 2.0
+    assert sum(outcomes.values()) == 48
+    assert time.perf_counter() - t0 < 12 * (deadline_s + 2.0)
