@@ -4,9 +4,11 @@
     PYTHONPATH=src python -m benchmarks.run --check
 
 ``--check`` is the serving-perf regression gate: it reruns
-``serve_bench --quick`` and exits 1 if ``ingest_points_per_s`` or
-``batched_qps`` regressed more than 20% against the committed
-``BENCH_serve.json``.
+``serve_bench --quick`` and ``frontend_load --quick`` and exits 1 if
+``ingest_points_per_s`` / ``batched_qps`` regressed more than 20%
+against the committed ``BENCH_serve.json``, or any query-path gate
+fails against ``BENCH_frontend.json`` (coalescing speedup, tail ratio,
+deadline violations — see ``frontend_load``'s docstring).
 
 Prints ``name,us_per_call,derived`` CSV (paper analogues documented in each
 module; DESIGN.md §9 maps benchmarks -> paper figures).
@@ -23,20 +25,25 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
     ap.add_argument("--check", action="store_true",
-                    help="rerun serve_bench --quick and fail on >20%% "
-                         "regression vs the committed BENCH_serve.json")
+                    help="rerun serve_bench --quick + frontend_load "
+                         "--quick and fail on regressions vs the "
+                         "committed BENCH_serve.json / "
+                         "BENCH_frontend.json")
     args = ap.parse_args()
 
     if args.check:
-        from . import serve_bench
+        from . import frontend_load, serve_bench
 
-        sys.exit(serve_bench.check())
+        rc = serve_bench.check()
+        rc = frontend_load.check() or rc
+        sys.exit(rc)
 
     from . import (
         coreset_sizes,
         fig1_seq_vs_amt,
         fig2_streaming,
         fig3_mapreduce,
+        frontend_load,
         kernel_bench,
         roofline_report,
         serve_bench,
@@ -51,6 +58,7 @@ def main() -> None:
         ("fig2", fig2_streaming.main),
         ("fig3", fig3_mapreduce.main),
         ("serve", serve_bench.main),
+        ("frontend_load", frontend_load.main),
         ("roofline", roofline_report.main),
     ]
     print("name,us_per_call,derived")

@@ -29,6 +29,7 @@ from .base import (
     select_engine,
     selection_value,
 )
+from .cost_model import CostModel, EngineSeed, default_cost_model
 from .exhaustive import exhaustive_best
 from .host import HostExhaustiveEngine, HostLocalSearchEngine
 from .jit_greedy import (
@@ -54,6 +55,7 @@ __all__ = [
     "SolverEngine", "coverage_matrix", "get_engine", "partition_by_engine",
     "register_engine", "registered_engines", "resolve_engine",
     "select_engine", "selection_value",
+    "CostModel", "EngineSeed", "default_cost_model",
     "HostExhaustiveEngine", "HostLocalSearchEngine",
     "JitGreedyBatchEngine", "JitSumBatchEngine",
     "bucket_pow2", "solve_sum_batch", "solve_sum_batch_transversal",

@@ -232,32 +232,70 @@ def resolve_engine(
     return e
 
 
-def select_engine(
+def _auto_candidates(
     ctx: SolveContext, spec: SolveSpec, *, hint: Optional[str] = None
-) -> SolverEngine:
-    """The ``engine="auto"`` policy: fastest eligible engine for this
-    request, restricted to engines with the host-parity guarantee — so an
-    auto answer always equals the host answer on the same coreset. A
-    query ``hint`` names a specific engine (e.g. the non-parity
-    ``jit_greedy``); a hint naming a *registered* engine that is not
-    eligible for this request falls back to auto rather than failing the
-    query, but an unknown engine name raises — silently downgrading a
-    typo'd hint to a slower engine would hide the caller's bug.
+) -> tuple[SolverEngine, ...]:
+    """Candidate engines for one ``engine="auto"`` request, best-first.
+
+    A query ``hint`` names a specific engine (e.g. the non-parity
+    ``jit_greedy``) and pins the candidate set to it; a hint naming a
+    *registered* engine that is not eligible for this request falls back
+    to the auto policy rather than failing the query, but an unknown
+    engine name raises — silently downgrading a typo'd hint to a slower
+    engine would hide the caller's bug. Without an applicable hint the
+    candidates are every eligible engine with the host-parity guarantee
+    (priority order) — any of them returns the same answer, which is what
+    makes cost-based picking among them a pure latency decision.
     """
     if hint == "host":
-        return resolve_engine("host", ctx, spec)
+        return (resolve_engine("host", ctx, spec),)
     if hint is not None:
         e = get_engine(hint)  # unknown name -> ValueError
         if e.eligible(ctx, spec):
-            return e
+            return (e,)
         # soft hint: eligible nowhere here, fall through to the auto policy
-    for e in registered_engines():
-        if e.exact_parity and e.eligible(ctx, spec):
-            return e
-    raise ValueError(
-        f"no registered engine covers variant={spec.variant!r} under "
-        f"matroid kind {ctx.spec.kind!r}"
+    cands = tuple(
+        e for e in registered_engines()
+        if e.exact_parity and e.eligible(ctx, spec)
     )
+    if not cands:
+        raise ValueError(
+            f"no registered engine covers variant={spec.variant!r} under "
+            f"matroid kind {ctx.spec.kind!r}"
+        )
+    return cands
+
+
+def select_engine(
+    ctx: SolveContext,
+    spec: SolveSpec,
+    *,
+    hint: Optional[str] = None,
+    cost_model=None,
+    batch_size: int = 1,
+) -> SolverEngine:
+    """The ``engine="auto"`` policy for a single request.
+
+    Without a ``cost_model`` this is the historical static policy: the
+    highest-priority eligible engine with the host-parity guarantee — so
+    an auto answer always equals the host answer on the same coreset.
+    With a ``cost_model`` (``core.solvers.cost_model.CostModel``), the
+    parity constraint still bounds the candidate set, but the pick within
+    it is argmin of ``estimate(engine, batch_size, kmax, m)`` — host
+    engines win tiny batches where dispatch dominates, jit engines win at
+    scale, and the crossover is measured rather than asserted.
+    """
+    cands = _auto_candidates(ctx, spec, hint=hint)
+    if cost_model is None or len(cands) == 1:
+        return cands[0]
+    winner, ests = cost_model.choose(
+        [e.name for e in cands], B=batch_size, kmax=spec.k, m=ctx.size
+    )
+    cost_model.record_decision(
+        engine=winner, candidates=ests,
+        B=batch_size, kmax=spec.k, m=ctx.size,
+    )
+    return get_engine(winner)
 
 
 def partition_by_engine(
@@ -266,22 +304,57 @@ def partition_by_engine(
     *,
     engine: str = "auto",
     hints: Optional[Sequence[Optional[str]]] = None,
+    cost_model=None,
+    batch_size: Optional[int] = None,
 ) -> dict[str, list[int]]:
     """Split a batch into per-engine groups (engine name -> spec indices).
 
     ``engine="auto"`` applies the auto policy per request (honoring
     per-request hints); any other name forces every request through that
     engine (raising if one is ineligible).
+
+    With a ``cost_model``, auto requests are first grouped by their
+    *candidate set* (hint-pinned requests bypass this), and each group is
+    routed as a unit: the model sees the group's true batch size ``B``
+    and its max ``k``, so ten concurrent B=1 callers coalesced into one
+    group route like one B=10 batch — per-request argmin would always see
+    B=1 and never cross over to the amortizing jit engines.
+    ``batch_size`` overrides the B the model sees (the micro-batch
+    coalescer partitions per caller for admission but routes with the
+    merged group's size). Decisions are
+    recorded in the model's audit ring and counted under
+    ``solve.dispatch.cost_routed``. ``cost_model=None`` (the default, and
+    what the offline ``solve_dmmc``/``final_solve`` drivers use) keeps
+    the static priority policy bit-for-bit.
     """
     groups: dict[str, list[int]] = {}
+    undecided: dict[tuple[str, ...], list[int]] = {}
     for i, s in enumerate(specs):
         if engine == "auto":
             h = hints[i] if hints is not None else None
-            e = select_engine(ctx, s, hint=h)
+            cands = _auto_candidates(ctx, s, hint=h)
+            if cost_model is None or len(cands) == 1:
+                groups.setdefault(cands[0].name, []).append(i)
+            else:
+                key = tuple(e.name for e in cands)
+                undecided.setdefault(key, []).append(i)
         else:
             e = resolve_engine(engine, ctx, s)
-        groups.setdefault(e.name, []).append(i)
+            groups.setdefault(e.name, []).append(i)
     reg = obs.default_registry()
+    for names, idxs in undecided.items():
+        kmax = max(specs[i].k for i in idxs)
+        B = len(idxs) if batch_size is None else max(batch_size, len(idxs))
+        winner, ests = cost_model.choose(names, B=B, kmax=kmax, m=ctx.size)
+        cost_model.record_decision(
+            engine=winner, candidates=ests, B=B, kmax=kmax, m=ctx.size,
+        )
+        reg.counter("solve.dispatch.cost_routed", engine=winner).inc(
+            len(idxs)
+        )
+        groups.setdefault(winner, []).extend(idxs)
+    for idxs in groups.values():
+        idxs.sort()
     for name, idxs in groups.items():
         reg.counter(
             "solve.dispatch.requests", engine=name, requested=engine

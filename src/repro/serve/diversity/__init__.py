@@ -51,6 +51,7 @@ from .faults import (
     InjectedCrash,
     InjectedFault,
 )
+from .coalesce import CoalesceConfig, Coalescer
 from .frontend import QueryFrontend
 from .query import DiversityQuery, QueryResult
 from .runtime import (
@@ -67,6 +68,7 @@ __all__ = [
     "CacheKey", "CacheStats", "CoresetEntry", "DistanceCache",
     "DiversityQuery", "QueryResult", "DiversityService", "IngestReport",
     "EpochSnapshot", "StreamRuntime", "QueryFrontend",
+    "CoalesceConfig", "Coalescer",
     "Tenant", "TenantRegistry", "DEFAULT_TENANT",
     "DurabilityConfig", "latest_checkpoint", "list_checkpoints",
     "load_checkpoint", "save_checkpoint",

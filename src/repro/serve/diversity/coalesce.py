@@ -1,0 +1,269 @@
+"""Adaptive micro-batch coalescing for the query frontend.
+
+At high concurrency, every ``query_batch`` call pays registry dispatch,
+epoch acquire, cache fetch, and a device launch *per call* — the costs
+the paper's coreset construction made small enough to amortize. The
+coalescer amortizes them: concurrent calls from any number of threads
+and tenants land in one bounded-window queue, a single dispatcher thread
+drains them into groups, and each group executes as merged pow-2-
+bucketed vmapped solves (one ``(engine, k-bucket)`` launch per group,
+routed by the calibrated cost model at the *merged* batch size), fanning
+results back to each blocked caller — bit-identical to what the caller
+would have computed alone, because only host-parity engines are merged
+and per-row vmap results are independent of batch composition.
+
+Window semantics (fairness = strict FIFO arrival order):
+
+* a call waits at most ``window_s`` (default 300 µs) for company; the
+  window closes *early* the moment every in-flight caller is already
+  represented in the group — a solo caller never idles out the window
+  (and in fact never enters the queue at all: the frontend bypasses the
+  coalescer entirely when it is the only active caller, keeping the
+  single-threaded path — spans, trace IDs, latency — byte-for-byte the
+  uncoalesced one);
+* a deadline caller's willingness to wait is ``deadline_window_frac`` of
+  its remaining budget, capped by ``window_s`` — the window can shave a
+  deadline, never blow it; admission (degrade/shed) then applies per
+  caller against whatever budget remains at dispatch;
+* groups cap at ``max_calls`` callers / ``max_queries`` queries so one
+  burst cannot build an unboundedly large device launch.
+
+Only calls agreeing on ``(tenant, engine, min_epoch)`` merge into one
+executed group: distinct ``min_epoch`` values must not share an epoch
+acquire (one may need to wait for a future publish), and distinct
+tenants solve on different cached matrices (their calls still share the
+dispatcher drain, which is where the per-call overhead lived).
+
+Observability: ``serve.coalesce.queue_wait_s`` / ``group_calls`` /
+``group_queries`` histograms, a live ``serve.coalesce.queue_depth``
+gauge, and ``serve.coalesce.{coalesced,solo}`` counters; each executed
+group runs under a ``coalesce_group`` span.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class CoalesceConfig:
+    """Tuning knobs for the micro-batch window (see module docstring)."""
+
+    window_s: float = 300e-6
+    max_calls: int = 64
+    max_queries: int = 512
+    # fraction of a deadline caller's remaining budget it may spend
+    # waiting in the window (the rest is reserved for the solve itself)
+    deadline_window_frac: float = 0.25
+    enabled: bool = True
+
+
+class PendingCall:
+    """One caller parked in the window (internal)."""
+
+    __slots__ = (
+        "tenant", "queries", "engine", "min_epoch", "deadline",
+        "enq_t", "dispatch_by", "done", "results", "error",
+        "specs", "degraded", "from_cache",
+    )
+
+    def __init__(self, tenant, queries, *, engine, min_epoch, deadline,
+                 enq_t, dispatch_by):
+        self.tenant = tenant
+        self.queries = queries
+        self.engine = engine
+        self.min_epoch = min_epoch
+        self.deadline = deadline  # absolute perf_counter or None
+        self.enq_t = enq_t
+        self.dispatch_by = dispatch_by
+        self.done = threading.Event()
+        self.results = None
+        self.error: Optional[BaseException] = None
+        self.specs = None
+        self.degraded = None
+        self.from_cache = False
+
+
+class Coalescer:
+    """Bounded-window queue + dispatcher thread in front of a frontend.
+
+    The dispatcher thread starts lazily on the first submitted call, so
+    frontends that never see concurrency never own a thread.
+    """
+
+    def __init__(self, frontend, config: CoalesceConfig):
+        self.frontend = frontend
+        self.config = config
+        reg = frontend.registry
+        self._m_queue_wait = reg.histogram("serve.coalesce.queue_wait_s")
+        self._m_group_calls = reg.histogram("serve.coalesce.group_calls")
+        self._m_group_queries = reg.histogram(
+            "serve.coalesce.group_queries"
+        )
+        self._m_depth = reg.gauge("serve.coalesce.queue_depth")
+        self._c_coalesced = reg.counter("serve.coalesce.coalesced")
+        self._c_groups = reg.counter("serve.coalesce.groups")
+        self._q: deque[PendingCall] = deque()
+        self._cv = threading.Condition()
+        self._thread: Optional[threading.Thread] = None
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    # caller side
+    # ------------------------------------------------------------------
+
+    @property
+    def backlog(self) -> int:
+        return len(self._q)
+
+    def submit(
+        self, tenant, queries: Sequence, *, engine: str,
+        min_epoch: Optional[int], deadline_s: Optional[float],
+    ):
+        """Park the call in the window; block until its group executed.
+        Returns the call's results (same list the direct path returns) or
+        re-raises whatever its group's execution raised."""
+        now = time.perf_counter()
+        cfg = self.config
+        if deadline_s is None:
+            deadline = None
+            wait = cfg.window_s
+        else:
+            deadline = now + deadline_s
+            wait = min(
+                cfg.window_s,
+                max(0.0, deadline_s) * cfg.deadline_window_frac,
+            )
+        p = PendingCall(
+            tenant, queries, engine=engine, min_epoch=min_epoch,
+            deadline=deadline, enq_t=now, dispatch_by=now + wait,
+        )
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("frontend is closed")
+            self._q.append(p)
+            self._m_depth.set(len(self._q))
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._loop,
+                    name="repro-coalesce",
+                    daemon=True,
+                )
+                self._thread.start()
+            self._cv.notify_all()
+        p.done.wait()
+        if p.error is not None:
+            raise p.error
+        return p.results
+
+    def close(self) -> None:
+        """Stop the dispatcher; fail anything still parked in the queue
+        (callers get the RuntimeError) rather than leaving them blocked."""
+        with self._cv:
+            self._closed = True
+            pending = list(self._q)
+            self._q.clear()
+            self._m_depth.set(0)
+            self._cv.notify_all()
+            t = self._thread
+        for p in pending:
+            p.error = RuntimeError("frontend closed while call was queued")
+            p.done.set()
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout=5.0)
+
+    def stats(self) -> dict:
+        return {
+            "queue_depth": len(self._q),
+            "groups": self._c_groups.value,
+            "coalesced_calls": self._c_coalesced.value,
+            "group_calls_p95": self._m_group_calls.quantile(0.95),
+            "queue_wait_p95_s": self._m_queue_wait.quantile(0.95),
+            "window_s": self.config.window_s,
+            "max_calls": self.config.max_calls,
+            "max_queries": self.config.max_queries,
+        }
+
+    # ------------------------------------------------------------------
+    # dispatcher side
+    # ------------------------------------------------------------------
+
+    def _collect(self) -> list[PendingCall]:
+        """Block for the next group: first waiting call + everything that
+        arrives before the group's earliest ``dispatch_by``, closing
+        early when all active callers are represented or the size caps
+        hit."""
+        cfg = self.config
+        group: list[PendingCall] = []
+        n_queries = 0
+        with self._cv:
+            while not self._q and not self._closed:
+                self._cv.wait(timeout=0.1)
+            if self._closed and not self._q:
+                return group
+            while True:
+                while (
+                    self._q
+                    and len(group) < cfg.max_calls
+                    and n_queries < cfg.max_queries
+                ):
+                    p = self._q.popleft()
+                    group.append(p)
+                    n_queries += len(p.queries)
+                self._m_depth.set(len(self._q))
+                if (
+                    self._closed
+                    or len(group) >= cfg.max_calls
+                    or n_queries >= cfg.max_queries
+                ):
+                    break
+                # grouped callers stay "active" until their results fan
+                # back, so active <= group size means nobody new can be
+                # en route: close the window early instead of idling
+                if self.frontend.active_calls() <= len(group):
+                    break
+                now = time.perf_counter()
+                earliest = min(p.dispatch_by for p in group)
+                if now >= earliest:
+                    break
+                self._cv.wait(timeout=earliest - now)
+        return group
+
+    def _loop(self) -> None:
+        while True:
+            group = self._collect()
+            if not group:
+                with self._cv:
+                    if self._closed:
+                        return
+                continue
+            now = time.perf_counter()
+            for p in group:
+                self._m_queue_wait.observe(now - p.enq_t)
+            self._m_group_calls.observe(len(group))
+            self._m_group_queries.observe(
+                sum(len(p.queries) for p in group)
+            )
+            if len(group) > 1:
+                self._c_coalesced.inc(len(group))
+            # executable sub-groups: only calls agreeing on
+            # (tenant, engine, min_epoch) share an epoch acquire + solve
+            subs: dict[tuple, list[PendingCall]] = {}
+            for p in group:
+                key = (p.tenant.name, p.engine, p.min_epoch)
+                subs.setdefault(key, []).append(p)
+            for sub in subs.values():
+                self._c_groups.inc()
+                try:
+                    self.frontend._solve_coalesced(sub)
+                except BaseException as e:  # noqa: BLE001 — fan the
+                    # failure back to every caller; the dispatcher must
+                    # survive any single group's error
+                    for p in sub:
+                        p.error = e
+                finally:
+                    for p in sub:
+                        p.done.set()

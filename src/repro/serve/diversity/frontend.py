@@ -18,17 +18,26 @@ dispatch that used to live inside ``DiversityService``:
              invalidated exactly when a *changed* epoch is published (the
              fingerprint moved) — §3 composability realized as cache
              fan-out instead of stream duplication;
-  solve      per-query engine dispatch is unchanged from the single-tenant
-             service: ``engine="auto"`` partitions a batch across the
-             fastest eligible host-parity engines, hints opt into
-             non-parity engines, the matrix is fetched (and possibly
-             built) exactly once per batch.
+  solve      per-query engine dispatch goes through the registry with a
+             calibrated ``CostModel``: ``engine="auto"`` partitions a
+             batch across eligible host-parity engines by *estimated
+             latency* (host engines win tiny dispatch-dominated batches,
+             jit engines win at scale; every measured solve refines the
+             model), hints opt into non-parity engines, the matrix is
+             fetched (and possibly built) exactly once per batch;
+  coalesce   under real concurrency, ``query_batch`` calls from any
+             threads/tenants merge through an adaptive micro-batch
+             window (``coalesce.Coalescer``) into shared vmapped solves,
+             bit-identical to per-call answers. A solo caller bypasses
+             the window entirely — single-threaded behavior (spans,
+             trace IDs, latency) is byte-for-byte the uncoalesced path.
 
 Thread-safe: any number of threads may query while the runtime's worker
 ingests; the cache serializes entry builds internally.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Optional, Sequence
 
@@ -36,16 +45,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from ... import obs
+from ...obs.jaxprof import RecompileWatch
 from ...core import geometry
 from ...core.final_solve import SubsetMatroidView
 from ...core.matroid import MatroidSpec, make_host_matroid
 from ...core.solvers import (
+    CostModel,
     SolveContext,
     SolveSpec,
+    bucket_pow2,
     get_engine,
     partition_by_engine,
 )
 from .cache import CoresetEntry, DistanceCache
+from .coalesce import CoalesceConfig, Coalescer, PendingCall
 from .query import DiversityQuery, QueryResult, candidate_mask
 from .runtime import EpochSnapshot, StreamRuntime
 from .tenants import DEFAULT_TENANT, Tenant, TenantRegistry
@@ -61,6 +74,8 @@ class QueryFrontend:
         cache: Optional[DistanceCache] = None,
         default_tenant: str = DEFAULT_TENANT,
         registry: Optional[obs.MetricsRegistry] = None,
+        cost_model: Optional[CostModel] = None,
+        coalesce: Optional[CoalesceConfig] = None,
     ):
         self.runtime = runtime
         # default to the runtime's registry so one serving stack counts in
@@ -73,6 +88,21 @@ class QueryFrontend:
         self.default_tenant = self.register_tenant(default_tenant)
         reg = self.registry
         self._m_epoch_wait_s = reg.histogram("serve.query.epoch_wait_s")
+        # each frontend owns its model so learned crossovers don't bleed
+        # between serving stacks (pass one in to share or pre-calibrate)
+        self.cost_model = cost_model if cost_model is not None else CostModel()
+        # a solve whose wall includes a jit trace+compile must not train
+        # the model: that cost is paid once per shape, not per request,
+        # and one 2 s compile EMA'd into a 5 ms cell would pin routing
+        # away from the jit engines forever
+        self._compiles = RecompileWatch()
+        self._active = 0
+        self._active_mu = threading.Lock()
+        self._traffic_t0 = time.perf_counter()
+        self._traffic_prev: dict[str, tuple[float, int]] = {}
+        cfg = CoalesceConfig() if coalesce is None else coalesce
+        self.coalescer = Coalescer(self, cfg) if cfg.enabled else None
+        self._closed = False
 
     # ------------------------------------------------------------------
     # tenants
@@ -202,15 +232,24 @@ class QueryFrontend:
     # deadline-aware admission
     # ------------------------------------------------------------------
 
-    def _predict_s(self, tenant: str, engine: str) -> float:
+    def _predict_s(
+        self, tenant: str, engine: str, *,
+        B: int = 1, kmax: int = 1, m: int = 1,
+    ) -> float:
         """Predicted wall time of one ``solve_batch`` call on ``engine``
         for this tenant: the p95 of its measured latency histogram
-        (PR 6's ``serve.solve.latency_s``). 0.0 with no history — the
-        first calls are admitted and train the predictor."""
+        (PR 6's ``serve.solve.latency_s``) once the tenant has history.
+        A *cold* tenant — empty histogram — is no longer admitted
+        optimistically (the old 0.0 prediction waved every first call
+        through any deadline): the cost model's estimate for the actual
+        (B, kmax, m) shape seeds the prediction until measurements take
+        over."""
         h = self.registry.histogram(
             "serve.solve.latency_s", tenant=tenant, engine=engine
         )
-        return h.quantile(0.95) if h.count else 0.0
+        if h.count:
+            return h.quantile(0.95)
+        return self.cost_model.estimate(engine, B=B, kmax=kmax, m=m)
 
     def _admit(
         self,
@@ -238,7 +277,15 @@ class QueryFrontend:
             for ix in groups.values():
                 shed.update(ix)
             return {}, degraded, shed
-        total = sum(self._predict_s(tenant, n) for n in groups)
+
+        def pred(name: str) -> float:
+            ix = groups[name]
+            return self._predict_s(
+                tenant, name, B=len(ix),
+                kmax=max(specs[i].k for i in ix), m=ctx.size,
+            )
+
+        total = sum(pred(n) for n in groups)
         if total > remaining_s and "host_exhaustive" in groups:
             greedy = get_engine("jit_greedy")
             moved = [
@@ -255,15 +302,13 @@ class QueryFrontend:
                     del groups["host_exhaustive"]
                 groups.setdefault("jit_greedy", []).extend(moved)
                 degraded.update(moved)
-                total = sum(self._predict_s(tenant, n) for n in groups)
+                total = sum(pred(n) for n in groups)
         if total > remaining_s:
-            for name in sorted(
-                groups, key=lambda n: self._predict_s(tenant, n),
-                reverse=True,
-            ):
+            preds = {n: pred(n) for n in groups}
+            for name in sorted(preds, key=preds.get, reverse=True):
                 if total <= remaining_s:
                     break
-                total -= self._predict_s(tenant, name)
+                total -= preds[name]
                 ix = groups.pop(name)
                 shed.update(ix)
                 degraded.difference_update(ix)
@@ -303,6 +348,12 @@ class QueryFrontend:
             deadline_s=deadline_s,
         )[0]
 
+    def active_calls(self) -> int:
+        """Number of ``query_batch`` calls currently inside the frontend
+        (counted before the coalesce-or-direct decision; coalesced
+        callers stay counted while parked in the window)."""
+        return self._active
+
     def query_batch(
         self,
         queries: Sequence[DiversityQuery],
@@ -316,13 +367,19 @@ class QueryFrontend:
         ONE tenant cache entry.
 
         ``engine="auto"`` partitions the batch across registry engines:
-        each query goes to the fastest eligible engine carrying the
-        host-parity guarantee (sum under uniform/partition/transversal ->
-        the vmapped batched solver; everything else -> the host reference
-        solvers), honoring per-query ``engine_hint`` opt-ins (e.g.
-        "jit_greedy" for approximate star/tree). Any other name forces
-        every query through that engine, raising if one is ineligible
-        ("vmap" is accepted as a legacy alias of "jit_sum").
+        each query goes to an eligible engine carrying the host-parity
+        guarantee, picked by the frontend's calibrated ``CostModel``
+        (host engines win tiny dispatch-dominated batches, jit engines
+        win at scale; decisions are logged in
+        ``cost_model.decisions()``), honoring per-query ``engine_hint``
+        opt-ins (e.g. "jit_greedy" for approximate star/tree). Any other
+        name forces every query through that engine, raising if one is
+        ineligible ("vmap" is accepted as a legacy alias of "jit_sum").
+
+        Under concurrency, calls coalesce through the micro-batch window
+        (see ``coalesce.py``) into merged vmapped solves — answers stay
+        bit-identical because only host-parity engines merge. A solo
+        caller bypasses the window and runs the direct path inline.
 
         ``min_epoch`` blocks until an epoch >= it is published (use the
         epoch returned by ``flush()`` to read your own writes); without
@@ -330,18 +387,57 @@ class QueryFrontend:
         active ingestion that answer is stale-but-consistent, never torn.
 
         ``deadline_s`` arms deadline-aware admission: before solving,
-        the measured per-engine latency (p95 of PR 6's histograms)
-        predicts whether the plan fits the remaining budget. Over-budget
-        exact star/tree queries downgrade to ``jit_greedy`` (result
-        marked ``degraded=True``); whatever still doesn't fit is shed
-        (``shed=True``, ``engine="shed"``, empty selection) instead of
-        queuing past the deadline. Per-tenant outcomes land in
-        ``serve.query.degraded`` / ``serve.query.shed`` /
-        ``serve.query.deadline_miss``.
+        the measured per-engine latency (p95 of PR 6's histograms, cost-
+        model estimates while cold) predicts whether the plan fits the
+        remaining budget. Over-budget exact star/tree queries downgrade
+        to ``jit_greedy`` (result marked ``degraded=True``); whatever
+        still doesn't fit is shed (``shed=True``, ``engine="shed"``,
+        empty selection) instead of queuing past the deadline. In the
+        coalescer, a deadline also bounds the time spent waiting in the
+        window. Per-tenant outcomes land in ``serve.query.degraded`` /
+        ``serve.query.shed`` / ``serve.query.deadline_miss``.
         """
         queries = list(queries)
         if not queries:
             return []
+        t = self._resolve_tenant(tenant)
+        reg = self.registry
+        reg.counter("serve.query.requests", tenant=t.name).inc()
+        reg.counter("serve.query.queries", tenant=t.name).inc(len(queries))
+        in_flight = reg.gauge("serve.query.in_flight", tenant=t.name)
+        with self._active_mu:
+            self._active += 1
+        in_flight.inc()
+        try:
+            co = self.coalescer
+            if co is not None and (self._active > 1 or co.backlog > 0):
+                return co.submit(
+                    t, queries, engine=engine, min_epoch=min_epoch,
+                    deadline_s=deadline_s,
+                )
+            if co is not None:
+                reg.counter("serve.coalesce.solo").inc()
+            return self._query_batch_direct(
+                queries, tenant=t, engine=engine, min_epoch=min_epoch,
+                deadline_s=deadline_s,
+            )
+        finally:
+            in_flight.inc(-1.0)
+            with self._active_mu:
+                self._active -= 1
+
+    def _query_batch_direct(
+        self,
+        queries: list[DiversityQuery],
+        *,
+        tenant=None,
+        engine: str = "auto",
+        min_epoch: Optional[int] = None,
+        deadline_s: Optional[float] = None,
+    ) -> list[QueryResult]:
+        """The uncoalesced solve path (one caller, one tenant, one epoch).
+        This is byte-for-byte the historical ``query_batch`` body — the
+        coalescer's parity contract is defined against it."""
         reg = self.registry
         t_batch = time.perf_counter()
         deadline = None if deadline_s is None else t_batch + deadline_s
@@ -401,6 +497,7 @@ class QueryFrontend:
                     specs,
                     engine=engine,
                     hints=[q.engine_hint for q in queries],
+                    cost_model=self.cost_model,
                 )
             degraded_ix: set = set()
             shed_ix: set = set()
@@ -426,6 +523,7 @@ class QueryFrontend:
             for name, idxs in groups.items():
                 eng = get_engine(name)
                 t1 = time.perf_counter()
+                c0 = self._compiles.total()
                 with obs.span(
                     "solve", cat="query", engine=name, n=len(idxs)
                 ):
@@ -450,12 +548,18 @@ class QueryFrontend:
                             tenant=t.name,
                             degraded=i in degraded_ix,
                         )
+                dt = time.perf_counter() - t1
                 reg.histogram(
                     "serve.solve.latency_s", tenant=t.name, engine=name
-                ).observe(time.perf_counter() - t1)
+                ).observe(dt)
                 reg.histogram(
                     "serve.solve.batch_size", engine=name
                 ).observe(len(idxs))
+                if self._compiles.total() == c0:
+                    self.cost_model.observe(
+                        name, len(idxs),
+                        max(specs[i].k for i in idxs), ctx.size, dt,
+                    )
             reg.histogram(
                 "serve.query.latency_s", tenant=t.name
             ).observe(time.perf_counter() - t_batch)
@@ -476,6 +580,170 @@ class QueryFrontend:
         return results  # type: ignore[return-value]
 
     # ------------------------------------------------------------------
+    # coalesced execution (dispatcher thread)
+    # ------------------------------------------------------------------
+
+    def _solve_coalesced(self, calls: "list[PendingCall]") -> None:
+        """Execute one coalesced group (calls agreeing on tenant, engine,
+        and ``min_epoch``; see ``coalesce.Coalescer``).
+
+        Semantics per caller are exactly the direct path's: per-caller
+        engine partition (hints honored) and per-caller deadline
+        admission happen *before* merging; only then do admitted specs
+        merge into pow-2-``k``-bucketed ``(engine, bucket)`` vmapped
+        solves shared across callers. Cost-model routing sees the merged
+        batch size, so a swarm of B=1 callers routes like the one big
+        batch it actually is. Bit-identity holds because auto/hinted
+        routing only merges host-parity engines and per-row vmap results
+        are independent of batch composition.
+        """
+        t: Tenant = calls[0].tenant
+        engine = calls[0].engine
+        min_epoch = calls[0].min_epoch
+        reg = self.registry
+        n_total = sum(len(c.queries) for c in calls)
+        with obs.trace(), obs.span(
+            "coalesce_group", cat="query", calls=len(calls), n=n_total,
+            engine=engine,
+        ):
+
+            def _shed_call(c, entry=None, cached=False, epoch=-1):
+                reg.counter(
+                    "serve.query.shed", tenant=t.name
+                ).inc(len(c.queries))
+                c.results = [
+                    self._shed_result(q, entry, cached, epoch, t.name)
+                    for q in c.queries
+                ]
+
+            # the group's epoch wait is bounded by its most patient
+            # caller; any deadline-free caller restores the default wait
+            kw = {}
+            if all(c.deadline is not None for c in calls):
+                kw["timeout"] = max(
+                    0.0,
+                    max(c.deadline for c in calls) - time.perf_counter(),
+                )
+            with obs.span(
+                "acquire_epoch", cat="query", min_epoch=min_epoch
+            ):
+                try:
+                    snap = self.runtime.acquire(min_epoch, **kw)
+                except TimeoutError:
+                    for c in calls:
+                        _shed_call(c)
+                    return
+            if min_epoch is not None:
+                now = time.perf_counter()
+                for c in calls:
+                    self._m_epoch_wait_s.observe(now - c.enq_t)
+            with obs.span(
+                "cache_entry", cat="query", tenant=t.name,
+                epoch=snap.epoch,
+            ):
+                entry, cached = self._entry(t, snap)
+            ctx = self._solve_context(t, snap, entry)
+            # per-caller plan: partition + admission before any merging
+            merged: dict[tuple[str, int], list] = {}
+            first = True
+            for c in calls:
+                c.from_cache = cached or not first
+                first = False
+                reg.counter(
+                    "serve.query.cache_hits" if c.from_cache
+                    else "serve.query.cache_misses",
+                    tenant=t.name,
+                ).inc()
+                c.results = [None] * len(c.queries)
+                c.specs = [self._solve_spec(entry, q) for q in c.queries]
+                groups = partition_by_engine(
+                    ctx,
+                    c.specs,
+                    engine=c.engine,
+                    hints=[q.engine_hint for q in c.queries],
+                    cost_model=self.cost_model,
+                    batch_size=n_total,
+                )
+                c.degraded = set()
+                shed_ix: set = set()
+                if c.deadline is not None:
+                    with obs.span("admit", cat="query"):
+                        groups, c.degraded, shed_ix = self._admit(
+                            ctx, c.specs, groups, t.name,
+                            c.deadline - time.perf_counter(),
+                        )
+                    if c.degraded:
+                        reg.counter(
+                            "serve.query.degraded", tenant=t.name
+                        ).inc(len(c.degraded))
+                    if shed_ix:
+                        reg.counter(
+                            "serve.query.shed", tenant=t.name
+                        ).inc(len(shed_ix))
+                for i in shed_ix:
+                    c.results[i] = self._shed_result(
+                        c.queries[i], entry, c.from_cache, snap.epoch,
+                        t.name,
+                    )
+                for name, idxs in groups.items():
+                    for i in idxs:
+                        kb = bucket_pow2(max(1, c.specs[i].k))
+                        merged.setdefault((name, kb), []).append((c, i))
+            # merged solves: one launch per (engine, k-bucket)
+            for (name, kb) in sorted(merged):
+                items = merged[(name, kb)]
+                eng = get_engine(name)
+                mspecs = [c.specs[i] for c, i in items]
+                t1 = time.perf_counter()
+                c0 = self._compiles.total()
+                with obs.span(
+                    "solve", cat="query", engine=name, n=len(items),
+                    k_bucket=kb, coalesced_calls=len({
+                        id(c) for c, _ in items
+                    }),
+                ):
+                    sols = eng.solve_batch(ctx, mspecs)
+                with obs.span("device_sync", cat="query", engine=name):
+                    for (c, i), sol in zip(items, sols):
+                        loc = np.asarray(sol.local_indices, np.int64)
+                        c.results[i] = QueryResult(
+                            indices=entry.src_idx[loc],
+                            local_indices=loc,
+                            diversity=sol.value,
+                            variant=c.queries[i].variant,
+                            engine=sol.engine,
+                            coreset_size=entry.size,
+                            from_cache=c.from_cache,
+                            epoch=snap.epoch,
+                            tenant=t.name,
+                            degraded=i in c.degraded,
+                        )
+                dt = time.perf_counter() - t1
+                reg.histogram(
+                    "serve.solve.latency_s", tenant=t.name, engine=name
+                ).observe(dt)
+                reg.histogram(
+                    "serve.solve.batch_size", engine=name
+                ).observe(len(items))
+                if self._compiles.total() == c0:
+                    self.cost_model.observe(
+                        name, len(items), max(s.k for s in mspecs),
+                        ctx.size, dt,
+                    )
+            now = time.perf_counter()
+            for c in calls:
+                reg.histogram(
+                    "serve.query.latency_s", tenant=t.name
+                ).observe(now - c.enq_t)
+                reg.histogram(
+                    "serve.query.batch_size", tenant=t.name
+                ).observe(len(c.queries))
+                if c.deadline is not None and now > c.deadline:
+                    reg.counter(
+                        "serve.query.deadline_miss", tenant=t.name
+                    ).inc()
+
+    # ------------------------------------------------------------------
     # freshness + observability
     # ------------------------------------------------------------------
 
@@ -484,9 +752,40 @@ class QueryFrontend:
         its number (pass as ``min_epoch`` to read your own writes)."""
         return self.runtime.flush(timeout=timeout)
 
+    def tenant_traffic(self) -> dict:
+        """Per-tenant traffic accounting from the ``serve.query.*``
+        series: cumulative requests/queries, live in-flight gauge, and
+        the QPS over the interval since the previous ``stats()`` /
+        ``tenant_traffic()`` call (first call: since frontend creation) —
+        who is saturating the frontend, at a glance."""
+        reg = self.registry
+        now = time.perf_counter()
+        out = {}
+        for name in self.tenants.names():
+            requests = reg.counter(
+                "serve.query.requests", tenant=name
+            ).value
+            queries = reg.counter("serve.query.queries", tenant=name).value
+            prev_t, prev_q = self._traffic_prev.get(
+                name, (self._traffic_t0, 0)
+            )
+            dt = now - prev_t
+            self._traffic_prev[name] = (now, queries)
+            out[name] = {
+                "requests": requests,
+                "queries": queries,
+                "in_flight": reg.gauge(
+                    "serve.query.in_flight", tenant=name
+                ).value,
+                "qps": (queries - prev_q) / dt if dt > 0 else 0.0,
+            }
+        return out
+
     def stats(self) -> dict:
         """One observability snapshot: epoch/publication counters from the
-        runtime plus the shared cache's ``CacheStats``."""
+        runtime, the shared cache's ``CacheStats``, per-tenant traffic,
+        the coalescer's window/queue accounting, and the cost model's
+        calibration state (including the routing-decision tail)."""
         lat = self.runtime.latest()
         return {
             "epoch": 0 if lat is None else lat.epoch,
@@ -501,4 +800,20 @@ class QueryFrontend:
             "tenants": self.tenants.names(),
             "cache_entries": len(self.cache),
             "cache": self.cache.stats.snapshot(),
+            "active_calls": self.active_calls(),
+            "tenant_traffic": self.tenant_traffic(),
+            "coalesce": (
+                None if self.coalescer is None else self.coalescer.stats()
+            ),
+            "cost_model": self.cost_model.snapshot(),
         }
+
+    def close(self) -> None:
+        """Shut down the coalescer's dispatcher thread (idempotent). The
+        runtime is owned by the caller and is not touched."""
+        if self._closed:
+            return
+        self._closed = True
+        self._compiles.close()
+        if self.coalescer is not None:
+            self.coalescer.close()

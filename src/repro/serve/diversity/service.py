@@ -79,6 +79,8 @@ class DiversityService:
         durability=None,
         fault_policy=None,
         faults=None,
+        cost_model=None,
+        coalesce=None,
     ):
         self._wire(
             StreamRuntime(
@@ -92,12 +94,16 @@ class DiversityService:
             ),
             cache=cache,
             registry=registry,
+            cost_model=cost_model,
+            coalesce=coalesce,
         )
 
-    def _wire(self, runtime: StreamRuntime, *, cache=None, registry=None):
+    def _wire(self, runtime: StreamRuntime, *, cache=None, registry=None,
+              cost_model=None, coalesce=None):
         self.runtime = runtime
         self.frontend = QueryFrontend(
-            runtime, cache=cache, registry=registry
+            runtime, cache=cache, registry=registry,
+            cost_model=cost_model, coalesce=coalesce,
         )
         self.cache = self.frontend.cache
         self.cache_key = self.frontend.default_tenant.key
@@ -118,13 +124,17 @@ class DiversityService:
 
     @classmethod
     def from_runtime(
-        cls, runtime: StreamRuntime, *, cache=None, registry=None
+        cls, runtime: StreamRuntime, *, cache=None, registry=None,
+        cost_model=None, coalesce=None,
     ) -> "DiversityService":
         """Wrap an existing runtime (e.g. one built by
         ``StreamRuntime.restore``) in the single-tenant façade without
         constructing a new stream."""
         svc = cls.__new__(cls)
-        return svc._wire(runtime, cache=cache, registry=registry)
+        return svc._wire(
+            runtime, cache=cache, registry=registry,
+            cost_model=cost_model, coalesce=coalesce,
+        )
 
     @classmethod
     def restore(
@@ -323,5 +333,7 @@ class DiversityService:
         )
 
     def close(self) -> None:
-        """Stop the runtime's async worker, if one was started."""
+        """Stop the frontend's coalescer and the runtime's async worker,
+        if they were started."""
+        self.frontend.close()
         self.runtime.close()

@@ -1,0 +1,478 @@
+"""Micro-batch coalescing + cost-model routing suite (PR 8 acceptance).
+
+Three contracts under test:
+
+* **cost model** — static seeds give host engines the dispatch-dominated
+  tiny batches and jit engines the large ones; online observations
+  override the seeds (and extrapolate along them across batch-size
+  buckets); the ``engine="auto"`` routing they drive is recorded with
+  its estimates.
+* **cold-tenant admission** — the deadline predictor's empty-histogram
+  fallback is the cost model, not "0.0 ⇒ admit anything" (the PR 7 bug:
+  a cold tenant's first exhaustive query sailed past any deadline).
+* **coalescing parity** — answers produced through the concurrent
+  window (multi-thread, multi-tenant, mixed engines/hints/buckets) are
+  bit-identical to the direct per-call path, and no caller's window wait
+  can stretch past its deadline.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from conftest import make_clustered_points
+from repro import obs
+from repro.core.matroid import MatroidSpec
+from repro.core.solvers import (
+    CostModel,
+    SolveContext,
+    SolveSpec,
+    partition_by_engine,
+)
+from repro.serve.diversity import (
+    CoalesceConfig,
+    DiversityQuery,
+    QueryFrontend,
+    StreamRuntime,
+)
+from repro.serve.diversity.coalesce import Coalescer
+
+
+# --------------------------------------------------------------------------
+# cost model
+# --------------------------------------------------------------------------
+
+
+def test_seed_crossover_host_small_jit_large():
+    cm = CostModel()
+    m, k = 20, 4
+    # dispatch dominates a single query: the host engine must win
+    assert cm.estimate("host_local_search", B=1, kmax=k, m=m) < cm.estimate(
+        "jit_sum", B=1, kmax=k, m=m
+    )
+    # amortized over a big batch the vmapped engine must win
+    assert cm.estimate("jit_sum", B=64, kmax=k, m=m) < cm.estimate(
+        "host_local_search", B=64, kmax=k, m=m
+    )
+    # so a finite pow-2 crossover exists and is consistent with both
+    b = cm.crossover("jit_sum", "host_local_search", kmax=k, m=m)
+    assert b is not None and b & (b - 1) == 0 and 1 < b <= 64
+
+
+def test_exhaustive_seed_explodes_with_k():
+    cm = CostModel()
+    small = cm.estimate("host_exhaustive", B=1, kmax=2, m=50)
+    big = cm.estimate("host_exhaustive", B=1, kmax=4, m=50)
+    assert big > 100 * small  # m**k growth, not linear
+
+
+def test_observations_override_seeds():
+    cm = CostModel()
+    seed_est = cm.estimate("jit_sum", B=8, kmax=4, m=32)
+    for _ in range(4):
+        cm.observe("jit_sum", 8, 4, 32, 0.5)
+    assert cm.estimate("jit_sum", B=8, kmax=4, m=32) == pytest.approx(
+        0.5, rel=0.3
+    )
+    assert cm.estimate("jit_sum", B=8, kmax=4, m=32) != seed_est
+    assert cm.calibrated("jit_sum", B=8, kmax=4, m=32)
+    assert not cm.calibrated("jit_sum", B=8, kmax=4, m=4096)
+
+
+def test_nearest_bucket_extrapolation():
+    """A B=1 measurement informs B=16 estimates along the seed shape —
+    10x slower than seed at B=1 stays ~10x slower at B=16."""
+    cm = CostModel()
+    static1 = cm.estimate("host_local_search", B=1, kmax=4, m=32)
+    static16 = cm.estimate("host_local_search", B=16, kmax=4, m=32)
+    cm.observe("host_local_search", 1, 4, 32, 10.0 * static1)
+    est16 = cm.estimate("host_local_search", B=16, kmax=4, m=32)
+    assert est16 == pytest.approx(10.0 * static16, rel=1e-6)
+
+
+def test_choose_ties_keep_caller_order():
+    cm = CostModel(seeds={})  # every engine on the flat fallback seed
+    winner, ests = cm.choose(["b_engine", "a_engine"], B=2, kmax=2, m=8)
+    assert winner == "b_engine"  # first in caller (priority) order
+    assert set(ests) == {"b_engine", "a_engine"}
+
+
+def test_decision_ring_records_estimates():
+    cm = CostModel()
+    w, ests = cm.choose(["jit_sum", "host_local_search"], B=4, kmax=4, m=16)
+    cm.record_decision(engine=w, candidates=ests, B=4, kmax=4, m=16)
+    d = cm.decisions()[-1]
+    assert d["engine"] == w and d["B"] == 4
+    assert set(d["estimates"]) == {"jit_sum", "host_local_search"}
+    assert cm.snapshot()["decisions"][-1] == d
+
+
+def _sum_ctx(rng, m=24):
+    from repro.core.matroid import make_host_matroid
+
+    D = np.abs(rng.normal(size=(m, m))).astype(np.float64)
+    D = (D + D.T) / 2
+    np.fill_diagonal(D, 0.0)
+    spec = MatroidSpec("uniform")
+    cats = np.zeros((m, 1), np.int32)
+    return SolveContext(
+        D=D, spec=spec, cats=cats,
+        # host engines need the oracle to be auto-candidates
+        matroid_fn=lambda s: make_host_matroid(spec, cats, None, m, s.k),
+    )
+
+
+def test_partition_by_engine_cost_model_routes_by_batch_size(rng):
+    ctx = _sum_ctx(rng)
+    spec = SolveSpec(k=4)
+    small = partition_by_engine(
+        ctx, [spec], cost_model=CostModel()
+    )
+    assert list(small) == ["host_local_search"]
+    big = partition_by_engine(
+        ctx, [spec] * 64, cost_model=CostModel()
+    )
+    assert list(big) == ["jit_sum"]
+    # batch_size override: one spec routed as if merged into a big group
+    merged = partition_by_engine(
+        ctx, [spec], cost_model=CostModel(), batch_size=64
+    )
+    assert list(merged) == ["jit_sum"]
+    # None keeps the historical static priority policy bit-for-bit
+    legacy = partition_by_engine(ctx, [spec])
+    assert list(legacy) == ["jit_sum"]
+
+
+# --------------------------------------------------------------------------
+# frontends under test
+# --------------------------------------------------------------------------
+
+
+def _frontend(rng, reg, *, coalesce=None, n=300, tau=24):
+    spec = MatroidSpec("partition", num_categories=4, gamma=1)
+    caps = np.full(4, 3, np.int32)
+    rt = StreamRuntime(spec, 5, tau=tau, caps=caps, registry=reg)
+    fe = QueryFrontend(rt, registry=reg, coalesce=coalesce)
+    P = make_clustered_points(rng, n=n)
+    cats = rng.integers(0, 4, (n, 1)).astype(np.int32)
+    rt.ingest(P, cats)
+    return rt, fe
+
+
+# --------------------------------------------------------------------------
+# cold-tenant deadline admission (satellite: PR 7 regression)
+# --------------------------------------------------------------------------
+
+
+def test_cold_predictor_seeds_from_cost_model(rng):
+    reg = obs.MetricsRegistry()
+    rt, fe = _frontend(rng, reg)
+    # empty histograms: the prediction must come from the cost model,
+    # not the old optimistic 0.0
+    p = fe._predict_s("default", "host_exhaustive", B=1, kmax=4, m=100)
+    assert p == fe.cost_model.estimate("host_exhaustive", B=1, kmax=4, m=100)
+    assert p > 1.0  # m**4 exhaustive: clearly over any sane budget
+    # once the tenant has history, the measured p95 takes over
+    reg.histogram(
+        "serve.solve.latency_s", tenant="default", engine="host_exhaustive"
+    ).observe(0.25)
+    assert fe._predict_s(
+        "default", "host_exhaustive", B=1, kmax=4, m=100
+    ) == pytest.approx(0.25, rel=0.5)
+    rt.close()
+
+
+def test_cold_tenant_exhaustive_not_admitted_past_deadline(rng):
+    """Regression: a cold tenant's first star query used to be admitted
+    optimistically (empty histogram -> 0.0 predicted) and then run a
+    multi-second exhaustive solve past its deadline. The cost-model seed
+    must degrade it to jit_greedy (or shed) up front."""
+    reg = obs.MetricsRegistry()
+    rt, fe = _frontend(rng, reg)
+    t0 = time.perf_counter()
+    res = fe.query(DiversityQuery(k=4, variant="star"), deadline_s=0.05)
+    elapsed = time.perf_counter() - t0
+    assert res.degraded or res.shed
+    assert res.engine in ("jit_greedy", "shed")
+    # the proof we never ran the exhaustive solve: it takes seconds at
+    # this coreset size (jit_greedy compile is the only slow part left)
+    assert elapsed < 30.0
+    assert reg.counter("serve.query.shed", tenant="default").value + \
+        reg.counter("serve.query.degraded", tenant="default").value >= 1
+    rt.close()
+
+
+# --------------------------------------------------------------------------
+# coalescing: parity + window semantics
+# --------------------------------------------------------------------------
+
+
+def _mixed_calls(fe):
+    """(tenant, queries) workload mixing tenants, ks across pow-2
+    buckets, engine hints, and category filters."""
+    return [
+        ("default", [DiversityQuery(k=2), DiversityQuery(k=5)]),
+        ("default", [DiversityQuery(k=3, allowed_cats=frozenset({0, 1, 2}))]),
+        ("uniform", [DiversityQuery(k=8)]),
+        ("uniform", [DiversityQuery(k=4, variant="star",
+                                    engine_hint="jit_greedy")]),
+        ("default", [DiversityQuery(k=4, caps=(1, 1, 1, 1))]),
+        ("uniform", [DiversityQuery(k=2), DiversityQuery(k=7),
+                     DiversityQuery(k=3)]),
+    ]
+
+
+def _assert_same(a, b):
+    assert a.indices.tolist() == b.indices.tolist()
+    assert a.local_indices.tolist() == b.local_indices.tolist()
+    assert a.diversity == b.diversity  # exact float equality
+    assert a.epoch == b.epoch
+    assert a.tenant == b.tenant
+    assert not a.degraded and not a.shed
+
+
+def test_concurrent_multitenant_parity(rng):
+    """Coalesced answers are bit-identical to the direct per-call path
+    across tenants, engines, hints, and k buckets."""
+    reg = obs.MetricsRegistry()
+    rt, fe = _frontend(rng, reg, coalesce=CoalesceConfig(window_s=0.02))
+    fe.register_tenant("uniform", spec=MatroidSpec("uniform"))
+    calls = _mixed_calls(fe)
+    # direct baseline, single-threaded (same epoch throughout)
+    baseline = [
+        fe._query_batch_direct(list(qs), tenant=fe.tenants.get(t))
+        for t, qs in calls
+    ]
+    for _round in range(3):
+        results = [None] * len(calls)
+        barrier = threading.Barrier(len(calls))
+
+        def worker(i, t, qs):
+            barrier.wait()
+            results[i] = fe.query_batch(qs, tenant=t)
+
+        threads = [
+            threading.Thread(target=worker, args=(i, t, qs))
+            for i, (t, qs) in enumerate(calls)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        for got, want in zip(results, baseline):
+            for a, b in zip(got, want):
+                _assert_same(a, b)
+    # the window actually coalesced concurrent callers (>= 2 in a group
+    # at least once across rounds; the barrier makes this overwhelmingly
+    # likely, but thread scheduling may let a first caller slip through
+    # solo — hence >=, not ==)
+    assert reg.counter("serve.coalesce.coalesced").value >= 2
+    fe.close()
+    rt.close()
+
+
+def test_forced_engine_parity_under_concurrency(rng):
+    """engine= forced legs (host reference and jit) coalesce without
+    changing a single bit of the answers."""
+    reg = obs.MetricsRegistry()
+    rt, fe = _frontend(rng, reg, coalesce=CoalesceConfig(window_s=0.02))
+    qs = [DiversityQuery(k=3), DiversityQuery(k=5)]
+    for engine in ("host", "jit_sum"):
+        want = fe._query_batch_direct(list(qs), tenant=None, engine=engine)
+        results = [None] * 6
+        barrier = threading.Barrier(6)
+
+        def worker(i):
+            barrier.wait()
+            results[i] = fe.query_batch(qs, engine=engine)
+
+        threads = [
+            threading.Thread(target=worker, args=(i,)) for i in range(6)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        for got in results:
+            for a, b in zip(got, want):
+                _assert_same(a, b)
+                assert a.engine == b.engine  # forced engine honored
+    fe.close()
+    rt.close()
+
+
+def test_solo_caller_bypasses_window(rng):
+    """A single-threaded caller never pays the window: the coalescer is
+    bypassed entirely (solo counter), no dispatcher groups form."""
+    reg = obs.MetricsRegistry()
+    rt, fe = _frontend(rng, reg, coalesce=CoalesceConfig(window_s=5.0))
+    t0 = time.perf_counter()
+    for _ in range(3):
+        fe.query(DiversityQuery(k=4))
+    assert time.perf_counter() - t0 < 5.0  # nowhere near window_s
+    assert reg.counter("serve.coalesce.solo").value == 3
+    assert reg.counter("serve.coalesce.coalesced").value == 0
+    assert fe.coalescer.backlog == 0
+    fe.close()
+    rt.close()
+
+
+def test_deadline_bounds_window_wait():
+    """No caller's time parked in the window may exceed
+    deadline_window_frac of its budget, whatever window_s says."""
+
+    class _Tenant:
+        name = "default"
+
+    class _FakeFrontend:
+        def __init__(self):
+            self.registry = obs.MetricsRegistry()
+            self.dispatched = []
+
+        def active_calls(self):
+            return 1_000_000  # never triggers the early close
+
+        def _solve_coalesced(self, calls):
+            now = time.perf_counter()
+            for c in calls:
+                c.results = now
+                self.dispatched.append(c)
+
+    fe = _FakeFrontend()
+    co = Coalescer(fe, CoalesceConfig(window_s=10.0))
+    try:
+        t0 = time.perf_counter()
+        dispatched_at = co.submit(
+            _Tenant(), [DiversityQuery(k=2)], engine="auto",
+            min_epoch=None, deadline_s=0.2,
+        )
+        waited = dispatched_at - t0
+        # budget 0.2 x frac 0.25 = 50 ms max in-window, not 10 s
+        assert waited < 0.15
+    finally:
+        co.close()
+
+
+def test_deadline_degrade_shed_through_coalescer(rng):
+    """Deadline admission composes with coalescing: concurrent deadline
+    callers each get per-caller degrade/shed, and none waits past its
+    budget inside the window."""
+    reg = obs.MetricsRegistry()
+    rt, fe = _frontend(rng, reg, coalesce=CoalesceConfig(window_s=0.05))
+    # warm the greedy engine so its compile doesn't eat the budgets
+    fe.query(DiversityQuery(k=4, variant="star", engine_hint="jit_greedy"))
+    # overload every engine's history for this tenant
+    for eng in (
+        "host_exhaustive", "jit_greedy", "jit_sum", "host_local_search"
+    ):
+        reg.histogram(
+            "serve.solve.latency_s", tenant="default", engine=eng,
+        ).observe(30.0)
+    deadline_s = 0.5
+    outcomes = [None] * 6
+    elapsed = [None] * 6
+    barrier = threading.Barrier(6)
+
+    def worker(i):
+        barrier.wait()
+        t0 = time.perf_counter()
+        outcomes[i] = fe.query(
+            DiversityQuery(k=4, variant="star"), deadline_s=deadline_s
+        )
+        elapsed[i] = time.perf_counter() - t0
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(6)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    for r, dt in zip(outcomes, elapsed):
+        assert r.shed and r.engine == "shed"  # nothing fits a 0.5s budget
+        assert len(r.indices) == 0
+        assert dt < deadline_s + 0.25  # never parked past the deadline
+    # shedding is an answer, not an error: the stack stays healthy
+    ok = fe.query(DiversityQuery(k=5))
+    assert not ok.shed and len(ok.indices) == 5
+    fe.close()
+    rt.close()
+
+
+def test_min_epoch_not_merged_across_values(rng):
+    """Calls with different min_epoch must not share an epoch acquire:
+    a reader-of-its-own-writes never gets an older group's snapshot."""
+    reg = obs.MetricsRegistry()
+    rt, fe = _frontend(rng, reg, coalesce=CoalesceConfig(window_s=0.05))
+    e0 = fe.flush()
+    P2 = make_clustered_points(np.random.default_rng(7), n=64)
+    cats2 = np.random.default_rng(7).integers(0, 4, (64, 1)).astype(np.int32)
+    rt.submit(P2, cats2)
+    e1 = fe.flush()
+    assert e1 > e0
+    results = [None, None]
+    barrier = threading.Barrier(2)
+
+    def worker(i, min_epoch):
+        barrier.wait()
+        results[i] = fe.query(
+            DiversityQuery(k=4), min_epoch=min_epoch
+        )
+
+    threads = [
+        threading.Thread(target=worker, args=(0, None)),
+        threading.Thread(target=worker, args=(1, e1)),
+    ]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert results[1].epoch >= e1
+    assert results[0].epoch >= e0
+    fe.close()
+    rt.close()
+
+
+# --------------------------------------------------------------------------
+# accounting (satellite: per-tenant traffic + queue depth in stats)
+# --------------------------------------------------------------------------
+
+
+def test_stats_tenant_traffic_and_coalesce_sections(rng):
+    reg = obs.MetricsRegistry()
+    rt, fe = _frontend(rng, reg, coalesce=CoalesceConfig(window_s=0.02))
+    fe.register_tenant("uniform", spec=MatroidSpec("uniform"))
+    fe.query_batch([DiversityQuery(k=3)] * 4)
+    fe.query(DiversityQuery(k=4), tenant="uniform")
+    st = fe.stats()
+    tt = st["tenant_traffic"]
+    assert tt["default"]["requests"] == 1
+    assert tt["default"]["queries"] == 4
+    assert tt["uniform"]["requests"] == 1
+    assert tt["uniform"]["queries"] == 1
+    assert tt["default"]["in_flight"] == 0.0
+    assert tt["default"]["qps"] > 0.0
+    # second snapshot with no traffic in between: interval qps drops to 0
+    st2 = fe.stats()
+    assert st2["tenant_traffic"]["default"]["qps"] == 0.0
+    assert st["coalesce"]["queue_depth"] == 0
+    assert st["active_calls"] == 0
+    # auto routing decisions are logged with their estimates
+    assert st["cost_model"]["decisions"]
+    assert all("estimates" in d for d in st["cost_model"]["decisions"])
+    fe.close()
+    rt.close()
+
+
+def test_frontend_close_idempotent_and_coalescer_refuses_after(rng):
+    reg = obs.MetricsRegistry()
+    rt, fe = _frontend(rng, reg, n=80, tau=12)
+    fe.query(DiversityQuery(k=3))
+    co = fe.coalescer
+    fe.close()
+    fe.close()  # idempotent
+    with pytest.raises(RuntimeError):
+        co.submit(
+            fe.default_tenant, [DiversityQuery(k=3)], engine="auto",
+            min_epoch=None, deadline_s=None,
+        )
+    rt.close()

@@ -391,7 +391,9 @@ def test_deadline_degrades_exact_to_greedy(rng):
 def test_deadline_sheds_when_nothing_fits(rng):
     reg = obs.MetricsRegistry()
     fe, k = _seeded_frontend(rng, reg)
-    for eng in ("host_exhaustive", "jit_greedy", "jit_sum"):
+    for eng in (
+        "host_exhaustive", "jit_greedy", "jit_sum", "host_local_search"
+    ):
         reg.histogram(
             "serve.solve.latency_s", tenant="default", engine=eng,
         ).observe(30.0)

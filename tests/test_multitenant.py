@@ -68,7 +68,7 @@ def test_tenant_fanout_isolated_entries_one_stream(rng):
     # uniform tenant is free of the caps
     m = PartitionMatroid(cats[:, 0], caps)
     assert m.is_independent(list(res["default"].indices))
-    assert res["uniform"].engine == "jit_sum"
+    assert res["uniform"].engine in ("jit_sum", "host_local_search")
     # warm path: repeat queries hit, never rebuild
     builds = fe.cache.stats.builds
     for t in tenants:

@@ -373,7 +373,10 @@ def test_query_default_engine_consistency(rng):
     q = DiversityQuery(k=k)
     one = svc.query(q)
     batch = svc.query_batch([q])[0]
-    assert one.engine == batch.engine == "jit_sum"
+    # the cost model may route a tiny batch to either parity engine, but
+    # query() and query_batch([q]) must agree (same model, same shape)
+    assert one.engine == batch.engine
+    assert one.engine in ("jit_sum", "host_local_search")
     assert one.indices.tolist() == batch.indices.tolist()
     assert one.diversity == batch.diversity
 
@@ -420,8 +423,9 @@ def test_transversal_batch_independent(rng):
     hosts = svc.query_batch(qs, engine="host")
     for r, hr in zip(auto, hosts):
         assert m.is_independent(list(r.indices))
-        # transversal sum now runs the jit batch engine with host parity
-        assert r.engine == "jit_sum"
+        # transversal sum is covered by both parity engines; the cost
+        # model picks by estimated latency for the batch shape
+        assert r.engine in ("jit_sum", "host_local_search")
         assert hr.engine == "host_local_search"
         assert sorted(r.indices.tolist()) == sorted(hr.indices.tolist())
         assert r.diversity == hr.diversity
@@ -446,7 +450,7 @@ def test_transversal_star_tree_hint_engines(rng):
         assert fast.diversity <= exact.diversity + 1e-9
         # hint that doesn't apply falls back to the auto policy
         r = svc.query(DiversityQuery(k=3, engine_hint="jit_greedy"))
-        assert r.engine == "jit_sum"
+        assert r.engine in ("jit_sum", "host_local_search")
 
 
 # --------------------------------------------------------------------------
@@ -473,7 +477,12 @@ def test_warm_batch_of_32_reuses_cached_matrix(rng):
     assert len(out) == 32
     assert all(r.from_cache for r in out)
     assert svc.cache.stats.builds == 1, "warm batch recomputed pdist"
-    assert {r.engine for r in out} == {"host_exhaustive", "jit_sum"}
+    engines = {r.engine for r in out}
+    assert "host_exhaustive" in engines  # tree queries stay exact
+    assert all(
+        r.engine in ("jit_sum", "host_local_search")
+        for r in out if r.variant == "sum"
+    )
     # heterogeneous ks answered
     assert sorted({len(r.indices) for r in out if r.variant == "sum"}) == [
         2, 3, 4, 5
