@@ -60,6 +60,18 @@ the budget; misses are gated via the min-over-rounds methodology).
 and ``goodput >= 0.5``; the post-crash replay checkpoint + restore
 report land in ``BENCH_fault_recovery/`` (CI uploads it).
 
+Replication (``replication``): a ``ReplicaSet`` (primary + WAL-shipped
+hot standby) driven through the stream with a seeded primary kill
+planted mid-ingest — the write path promotes the standby inline
+(replaying the acked WAL tail) and the run records ``failover_s``,
+``failover_parity`` (post-failover fingerprint bit-identical to a
+single-runtime replay — zero acked batches lost), per-batch replication
+lag (the ``serve.replication.lag_batches`` histogram) and an
+``IntegrityAuditor`` pass over the surviving set. ``--check`` gates
+``failover_parity``, ``failover_s <= 5``, a populated lag histogram and
+``audit_violations == 0``; the failover report lands in
+``BENCH_failover/`` (CI uploads it).
+
 Observability (``repro.obs``): every run embeds the full metrics snapshot
 in the artifact (``metrics``), the recompile census keyed by compile
 region (``recompiles_by_key``), the warmed-window recompile count
@@ -491,6 +503,120 @@ def _fault_tolerance(P, cats, caps, spec, k: int, tau: int,
     return dict(recovery=recovery, chaos=chaos, deadline=deadline)
 
 
+def _replication(P, cats, caps, spec, k: int, tau: int,
+                 quick: bool) -> dict:
+    """Replication section: WAL-shipped hot standby + primary-kill
+    failover + online integrity audit.
+
+    A ``ReplicaSet`` (primary + 1 standby, each with its own WAL) is
+    driven through the full stream with a seeded worker crash planted
+    mid-ingest on the primary. The write path detects the dead primary,
+    promotes the standby (replaying the acked WAL tail first) and
+    retries inline — recorded are the failover wall time
+    (``failover_s``), acked-batch accounting, and ``failover_parity``:
+    the post-failover fingerprint must be bit-identical to a
+    single-runtime replay of the same stream (zero acked batches lost,
+    the §3 composability argument made operational). Per-batch
+    ``observe_lag`` calls populate the
+    ``serve.replication.lag_batches`` histogram. An
+    ``IntegrityAuditor`` pass over the surviving set closes the run:
+    coverage radius vs tau, matroid independence of every delegate
+    set, cached pdist spot-checks — ``audit_violations`` must be 0.
+    The failover report lands in ``BENCH_failover/`` (CI uploads it).
+    """
+    import shutil
+    import tempfile
+
+    from repro import obs
+    from repro.serve.diversity import (
+        DiversityQuery,
+        FaultPlan,
+        FaultPolicy,
+        FaultRule,
+        IntegrityAuditor,
+        ReplicaSet,
+        StreamRuntime,
+    )
+
+    n = P.shape[0]
+    reg = obs.default_registry()
+    batch = 256
+    n_batches = (n + batch - 1) // batch
+    kill_after = max(2, n_batches // 2)
+    tmp = tempfile.mkdtemp(prefix="bench-repl-")
+    plan = FaultPlan(11, [
+        FaultRule(site="worker.loop", kind="crash", after=kill_after,
+                  times=1),
+    ])
+    rs = ReplicaSet.create(
+        spec, k, dir=os.path.join(tmp, "replicas"), caps=caps, tau=tau,
+        block_size=BLOCK_SIZE, registry=reg, faults=plan,
+        fault_policy=FaultPolicy(max_worker_restarts=0),
+    )
+    lag_obs, max_lag = 0, 0
+    for off in range(0, n, batch):
+        rs.submit(P[off:off + batch], cats[off:off + batch])
+        lags = rs.observe_lag()
+        lag_obs += len(lags)
+        if lags:
+            max_lag = max(max_lag, max(lags.values()))
+    rs.flush()
+    st = rs.stats()
+    lf = rs.last_failover or {}
+    # bit-identical parity against a single runtime folding the same
+    # stream: the promoted standby replayed WAL records, never points
+    ref = StreamRuntime(spec, k, tau=tau, caps=caps,
+                        block_size=BLOCK_SIZE)
+    for off in range(0, n, batch):
+        ref.ingest(P[off:off + batch], cats[off:off + batch])
+    ref_fp = ref.refresh(force=True).fingerprint
+    ref.close()
+    prt = rs.primary.runtime
+    parity = bool(prt.n_offered == n and prt.fingerprint == ref_fp)
+    # the promoted stack keeps serving: one query through the set
+    res = rs.query(DiversityQuery(k=k))
+    # online integrity audit over the surviving replicas
+    auditor = IntegrityAuditor(rs, registry=reg)
+    reports = auditor.audit_once()
+    audit = dict(
+        checks=int(auditor.total_checks),
+        violations=int(auditor.total_violations),
+        reports=[
+            dict(replica=r.replica, checks=int(r.checks),
+                 violations=list(r.violations))
+            for r in reports
+        ],
+    )
+    # preserve the failover report as a CI artifact
+    art_dir = os.path.join(os.path.dirname(_JSON_PATH), "BENCH_failover")
+    shutil.rmtree(art_dir, ignore_errors=True)
+    os.makedirs(art_dir, exist_ok=True)
+    with open(os.path.join(art_dir, "failover.json"), "w") as f:
+        json.dump(dict(
+            last_failover=lf, stats=st, failover_parity=parity,
+            audit=audit, query_diversity=float(res.diversity),
+        ), f, indent=2, default=str)
+    rs.close()
+    shutil.rmtree(tmp, ignore_errors=True)
+    return dict(
+        n_ingested=int(n),
+        n_standbys=1,
+        failovers=int(st["failovers"]),
+        failover_s=float(lf.get("duration_s", -1.0)),
+        promoted=lf.get("promoted"),
+        retired=lf.get("retired"),
+        acked_seq=int(st["acked_seq"]),
+        acked_batches=int(st["acked_batches"]),
+        failover_parity=parity,
+        lag_observations=int(lag_obs),
+        max_lag_batches=int(max_lag),
+        reseeds=int(st["reseeds"]),
+        audit_checks=audit["checks"],
+        audit_violations=audit["violations"],
+        artifact="BENCH_failover/",
+    )
+
+
 def _bench(quick: bool, num_shards: int | None = None) -> dict:
     import jax
 
@@ -683,6 +809,9 @@ def _bench(quick: bool, num_shards: int | None = None) -> dict:
     # mixed workload so the trace ring still ends on the full span story)
     fault = _fault_tolerance(P, cats, caps, spec, k, tau, quick)
 
+    # replication: hot standby, primary-kill failover, integrity audit
+    repl = _replication(P, cats, caps, spec, k, tau, quick)
+
     # concurrent ingest+query + multi-tenant fan-out (its own runtime so
     # the contention window doesn't perturb the services measured above)
     mixed = _mixed_workload(P, cats, caps, spec, k, tau, quick,
@@ -731,6 +860,7 @@ def _bench(quick: bool, num_shards: int | None = None) -> dict:
         engine_mix=engine_mix,
         mixed_workload=mixed,
         fault_tolerance=fault,
+        replication=repl,
         transversal_n=int(n_tv),
         transversal_coreset_size=int(res_tv.coreset_size),
         offline_diversity=float(sol.diversity),
@@ -922,6 +1052,39 @@ def check(tolerance: float = 0.2, quick: bool = True) -> int:
     else:
         print("check: fault_tolerance section missing -> REGRESSION")
         rc = 1
+    # replication gates (machine-relative / boolean, enforced
+    # everywhere): a mid-ingest primary kill must promote the standby
+    # within bounded time with a bit-identical stream and zero acked
+    # batches lost, the lag histogram must carry observations, and the
+    # integrity audit of the surviving set must be clean
+    rp = new.get("replication", {})
+    if rp:
+        ok = (rp["failover_parity"] and rp["failovers"] >= 1
+              and 0.0 <= rp["failover_s"] <= 5.0)
+        print(f"check: replication failover: failovers={rp['failovers']}, "
+              f"{rp['failover_s']:.2f}s (ceiling 5), "
+              f"parity={rp['failover_parity']}, "
+              f"promoted={rp.get('promoted')}, acked "
+              f"{rp['acked_batches']} batches -> "
+              f"{'OK' if ok else 'FAILOVER REGRESSION'}")
+        if not ok:
+            rc = 1
+        ok = rp["lag_observations"] > 0
+        print(f"check: replication lag histogram: "
+              f"{rp['lag_observations']} observations, max lag "
+              f"{rp['max_lag_batches']} batches -> "
+              f"{'OK' if ok else 'LAG HISTOGRAM EMPTY'}")
+        if not ok:
+            rc = 1
+        ok = rp["audit_violations"] == 0 and rp["audit_checks"] > 0
+        print(f"check: replication audit: {rp['audit_checks']} checks, "
+              f"{rp['audit_violations']} violations (must be 0) -> "
+              f"{'OK' if ok else 'INTEGRITY REGRESSION'}")
+        if not ok:
+            rc = 1
+    else:
+        print("check: replication section missing -> REGRESSION")
+        rc = 1
     # steady-state recompile gate (machine-independent, gated everywhere):
     # the warmed measurement windows must compile NOTHING — a recompile
     # there means a jit cache key (bucketed shape, static arg) failed to
@@ -1043,6 +1206,19 @@ def main(quick: bool = False, emit_json: bool = False,
                    f"degraded={ft['deadline']['degraded_fraction']:.2f} "
                    f"shed={ft['deadline']['shed_fraction']:.2f} "
                    f"violations={ft['deadline']['deadline_violations']}")
+    rp = r["replication"]
+    yield csv_line("serve_failover", rp["failover_s"] * 1e6,
+                   f"failovers={rp['failovers']} "
+                   f"parity={rp['failover_parity']} "
+                   f"promoted={rp['promoted']} "
+                   f"acked={rp['acked_batches']}")
+    yield csv_line("serve_replication_lag", 0.0,
+                   f"max_lag={rp['max_lag_batches']} "
+                   f"observations={rp['lag_observations']} "
+                   f"reseeds={rp['reseeds']}")
+    yield csv_line("serve_audit", 0.0,
+                   f"checks={rp['audit_checks']} "
+                   f"violations={rp['audit_violations']}")
     yield csv_line("serve_obs_overhead", 0.0,
                    f"ingest={r['obs_overhead']['ingest_overhead']:+.1%} "
                    f"batched={r['obs_overhead']['batched_qps_overhead']:+.1%} "

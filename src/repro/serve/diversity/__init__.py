@@ -35,10 +35,21 @@ write-ahead log + periodic checkpoints (``StreamRuntime.restore`` /
 ``query_batch(deadline_s=...)`` degrades or sheds instead of queuing
 unboundedly, and ``faults=FaultPlan(...)`` arms the deterministic
 chaos-testing harness.
+
+Replication (README "Replication & failover"): ``ReplicaSet`` ships the
+primary's WAL records to hot standbys that replay them through their own
+supervised ingest (bit-identical by the §3 pure-fold argument), verifies
+parity by O(1) fingerprint exchange (divergent standbys fence + re-seed
+from the primary's checkpoint), serves stale-but-consistent reads from
+standbys under saturation, and promotes the most-caught-up standby on
+primary death with acked-batch durability. ``HealthMonitor`` drives the
+heartbeat/lag/parity probes; ``IntegrityAuditor`` spot-checks published
+coreset invariants off the hot path and quarantines failing replicas.
 """
 from .cache import CacheKey, CacheStats, CoresetEntry, DistanceCache
 from .checkpoint import (
     DurabilityConfig,
+    checkpoint_watermark,
     latest_checkpoint,
     list_checkpoints,
     load_checkpoint,
@@ -51,9 +62,18 @@ from .faults import (
     InjectedCrash,
     InjectedFault,
 )
+from .audit import AuditConfig, AuditReport, IntegrityAuditor
 from .coalesce import CoalesceConfig, Coalescer
 from .frontend import QueryFrontend
+from .health import HealthConfig, HealthMonitor
 from .query import DiversityQuery, QueryResult
+from .replication import (
+    Replica,
+    ReplicaSet,
+    ReplicationConfig,
+    ReplicationGap,
+    Standby,
+)
 from .runtime import (
     EpochSnapshot,
     IngestReport,
@@ -70,9 +90,12 @@ __all__ = [
     "EpochSnapshot", "StreamRuntime", "QueryFrontend",
     "CoalesceConfig", "Coalescer",
     "Tenant", "TenantRegistry", "DEFAULT_TENANT",
-    "DurabilityConfig", "latest_checkpoint", "list_checkpoints",
-    "load_checkpoint", "save_checkpoint",
+    "DurabilityConfig", "checkpoint_watermark", "latest_checkpoint",
+    "list_checkpoints", "load_checkpoint", "save_checkpoint",
     "FaultPlan", "FaultPolicy", "FaultRule",
     "InjectedCrash", "InjectedFault", "PoisonedBatch",
     "WalError", "WalRecord", "WriteAheadLog",
+    "Replica", "ReplicaSet", "ReplicationConfig", "ReplicationGap",
+    "Standby", "HealthConfig", "HealthMonitor",
+    "AuditConfig", "AuditReport", "IntegrityAuditor",
 ]

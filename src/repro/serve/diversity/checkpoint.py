@@ -181,6 +181,17 @@ def latest_checkpoint(dir: str) -> Optional[str]:
     return None
 
 
+def checkpoint_watermark(dir: str) -> "tuple[Optional[str], int, int]":
+    """``(path, wal_seq, n_offered)`` of the newest valid checkpoint —
+    the resume coordinate replication re-seeds and failover reports work
+    from. ``(None, -1, 0)`` when the dir has no readable checkpoint."""
+    path = latest_checkpoint(dir)
+    if path is None:
+        return None, -1, 0
+    meta = read_meta(path)
+    return path, int(meta.get("wal_seq", -1)), int(meta.get("n_offered", 0))
+
+
 def prune_checkpoints(dir: str, keep: int) -> int:
     """Delete all but the newest ``keep`` checkpoints; returns the
     lowest retained WAL watermark (-1 when none carry one), which is

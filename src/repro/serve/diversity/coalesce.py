@@ -159,6 +159,24 @@ class Coalescer:
             raise p.error
         return p.results
 
+    def drain(self) -> list:
+        """Stop the dispatcher and hand back everything still parked in
+        the window — WITHOUT failing it. The callers stay blocked on
+        their events; whoever drained (``ReplicaSet`` failover) owns
+        re-dispatching each returned ``PendingCall`` on the new primary
+        and setting ``results``/``error`` + ``done``. After ``drain()``
+        the coalescer is closed: new submits raise."""
+        with self._cv:
+            self._closed = True
+            pending = list(self._q)
+            self._q.clear()
+            self._m_depth.set(0)
+            self._cv.notify_all()
+            t = self._thread
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout=5.0)
+        return pending
+
     def close(self) -> None:
         """Stop the dispatcher; fail anything still parked in the queue
         (callers get the RuntimeError) rather than leaving them blocked."""

@@ -24,7 +24,20 @@ Instrumented sites (see ``StreamRuntime``/``WriteAheadLog``/
                        ``InjectedFault``, ``kind="delay"`` injects a
                        slow ingest;
 ``wal.append``         before each WAL record write;
-``checkpoint.write``   before each checkpoint file write.
+``checkpoint.write``   before each checkpoint file write;
+``wal.compact``        mid-compaction, *after* the replacement log is
+                       fully written but *before* the atomic swap —
+                       both generations exist on disk, either must
+                       restore bit-identically;
+``replication.ship``   once per record shipped primary -> standby — an
+                       ``"error"`` drops the record on the wire (the
+                       standby falls behind and must catch up from the
+                       primary's WAL or re-seed);
+``replica.crash``      once per record applied by a standby's apply
+                       thread — ``kind="crash"`` kills the standby;
+``health.heartbeat``   once per health-monitor heartbeat probe of the
+                       primary — ``"error"`` makes the probe fail,
+                       driving the failure-threshold -> failover path.
 
 Clock skew: ``plan.monotonic()`` is ``time.monotonic() +
 clock_skew_s``; the runtime stamps epochs and staleness with it, so a

@@ -808,6 +808,38 @@ class QueryFrontend:
             "cost_model": self.cost_model.snapshot(),
         }
 
+    def drain_pending(self) -> list:
+        """Failover support: stop this frontend's coalescer and return
+        every in-window ``PendingCall`` *un-failed* — the callers stay
+        blocked on their events. The drainer (``ReplicaSet.failover``)
+        re-dispatches them on the promoted frontend via
+        ``adopt_pending``. Idempotent with ``close()``: after draining,
+        this frontend is closed."""
+        self._closed = True
+        self._compiles.close()
+        if self.coalescer is None:
+            return []
+        return self.coalescer.drain()
+
+    def adopt_pending(self, calls: list) -> int:
+        """Re-dispatch ``PendingCall``s drained from a failed peer
+        frontend on THIS frontend: remap each call's tenant to the local
+        registry (replica frontends register the same tenant names),
+        solve, and release the still-blocked caller. Returns the number
+        of calls released."""
+        released = 0
+        for c in calls:
+            try:
+                c.tenant = self._resolve_tenant(c.tenant.name)
+                self._solve_coalesced([c])
+            except BaseException as e:  # noqa: BLE001 — fan the failure
+                # back to the blocked caller; adoption must release all
+                c.error = e
+            finally:
+                c.done.set()
+                released += 1
+        return released
+
     def close(self) -> None:
         """Shut down the coalescer's dispatcher thread (idempotent). The
         runtime is owned by the caller and is not touched."""

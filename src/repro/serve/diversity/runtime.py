@@ -63,6 +63,7 @@ the queue then stops the worker (idempotent).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import logging
@@ -293,6 +294,13 @@ class StreamRuntime:
         self._m_ckpt_saved = reg.counter("serve.ckpt.saved")
         self._m_ckpt_failures = reg.counter("serve.ckpt.failures")
         self._m_ckpt_last_seq = reg.gauge("serve.ckpt.last_seq")
+        self._m_rejected_nonfinite = reg.counter(
+            "serve.ingest.rejected", reason="nonfinite"
+        )
+        # (n_offered, fingerprint) after each ingest: replicas seeing the
+        # same batch sequence compare fingerprints at a common watermark
+        # in O(1) instead of shipping coresets (see replication.py).
+        self._fp_history: collections.deque = collections.deque(maxlen=1024)
         if self.durability is not None:
             os.makedirs(self.durability.dir, exist_ok=True)
             self._wal = WriteAheadLog(
@@ -325,6 +333,39 @@ class StreamRuntime:
         """Coreset content fingerprint as of the last ingest (``None``
         until something was ingested or ``ensure_state`` ran)."""
         return self._fingerprint
+
+    def fingerprint_at(self, n_offered: int) -> Optional[int]:
+        """Coreset fingerprint recorded right after the ingest that
+        brought the stream to ``n_offered`` points, or ``None`` if no
+        ingest landed exactly there (or it aged out of the bounded
+        history). Because the stream is a pure fold over the batch
+        sequence, two runtimes fed the same batches must agree at every
+        common watermark — replication's O(1) divergence check."""
+        with self._cv:
+            for n, fp in reversed(self._fp_history):
+                if n == n_offered:
+                    return fp
+                if n < n_offered:
+                    break
+            return None
+
+    def fingerprint_watermarks(self) -> list[int]:
+        """The ``n_offered`` watermarks currently in the fingerprint
+        history (ascending)."""
+        with self._cv:
+            return [n for n, _fp in self._fp_history]
+
+    def _check_finite(self, points: np.ndarray) -> None:
+        """Reject NaN/Inf points at the door — *before* the WAL append.
+        A poisoned log entry would otherwise replay poison on every
+        restore."""
+        pts = np.asarray(points)
+        if pts.size and not bool(np.isfinite(pts).all()):
+            self._m_rejected_nonfinite.inc()
+            raise ValueError(
+                "batch contains non-finite point coordinates (NaN/Inf); "
+                "rejected before WAL append"
+            )
 
     def _check_cats(self, n: int, cats: Optional[np.ndarray]) -> np.ndarray:
         if cats is None:
@@ -373,6 +414,7 @@ class StreamRuntime:
             self._fingerprint, self._coreset_size = (
                 self._fingerprint_and_size()
             )
+            self._fp_history.append((self.n_offered, self._fingerprint))
             self._dirty = True  # first refresh publishes the empty epoch
 
     def point_dim(self) -> Optional[int]:
@@ -411,7 +453,11 @@ class StreamRuntime:
         logs the batch before applying it (``submit`` logs at enqueue time
         instead); calling ``ingest_sharded``/``ingest_pipeline`` directly
         bypasses the log.
+
+        Raises ``ValueError`` (batch neither logged nor applied) on
+        NaN/Inf coordinates.
         """
+        self._check_finite(points)
         with self._cv:
             seq = self._wal_begin(points, cats)
             if self.num_shards > 1:
@@ -701,6 +747,7 @@ class StreamRuntime:
         changed = fp != self._fingerprint
         self._fingerprint = fp
         self._coreset_size = size
+        self._fp_history.append((self.n_offered, fp))
         self._dirty = True
         self._unpublished += 1
         self._m_ingest_s.observe(time.perf_counter() - t0)
@@ -894,7 +941,7 @@ class StreamRuntime:
 
     def submit(
         self, points: np.ndarray, cats: Optional[np.ndarray] = None
-    ) -> None:
+    ) -> int:
         """Enqueue one batch for background ingestion and return without
         waiting for the scan. Batches are ingested strictly in submission
         order (one worker), so the resulting stream — and therefore every
@@ -907,9 +954,14 @@ class StreamRuntime:
         *before* it is enqueued: once ``submit`` returns, the batch
         survives a process death (``restore`` replays it). A failed
         append raises ``WalError`` here, in the submitter — the batch was
-        neither persisted nor enqueued.
+        neither persisted nor enqueued. Non-finite points raise
+        ``ValueError`` before the append, so the log never holds poison.
+
+        Returns the WAL seq assigned to the batch (-1 on a non-durable
+        runtime) — ``ReplicaSet`` ships that seq to standbys.
         """
         pts = np.asarray(points, np.float32)
+        self._check_finite(pts)
         with obs.trace() as tid, obs.span(
             "submit", cat="ingest", n=int(pts.shape[0])
         ):
@@ -933,6 +985,7 @@ class StreamRuntime:
             # covers submit -> ingest -> publish across threads)
             self._queue.put((pts, cats, seq, self._clock(), tid))
             self._m_queue_depth.set(self._queue.qsize())
+        return seq
 
     def _ensure_worker(self) -> None:
         """Start (or, defensively, respawn) the ingest worker. Caller
@@ -1278,7 +1331,16 @@ class StreamRuntime:
         self._m_ckpt_last_seq.set(wal_seq)
         floor = prune_checkpoints(dur.dir, dur.keep)
         if self._wal is not None and floor >= 0:
-            self._wal.compact(floor)
+            try:
+                self._wal.compact(floor)
+            except Exception as e:  # noqa: BLE001 — counted; the
+                # superset log replays correctly, compaction retries on
+                # the next checkpoint cadence
+                self.registry.counter("serve.wal.compact_errors").inc()
+                _log.warning(
+                    "WAL compaction failed (%s: %s); serving continues "
+                    "on the uncompacted log", type(e).__name__, e,
+                )
         return path
 
     @classmethod
@@ -1386,6 +1448,7 @@ class StreamRuntime:
                 rt._fingerprint, rt._coreset_size = (
                     rt._fingerprint_and_size()
                 )
+                rt._fp_history.append((rt.n_offered, rt._fingerprint))
                 rt._dirty = True
         # replay the WAL tail: records newer than the checkpoint's
         # watermark, in file order == submission order

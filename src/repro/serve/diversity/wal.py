@@ -230,6 +230,11 @@ class WriteAheadLog:
                 f.flush()
                 if self.fsync:
                     os.fsync(f.fileno())
+            # chaos site: at this point BOTH generations are on disk
+            # (old log at self.path, replacement at tmp). A crash here
+            # must restore bit-identically from either file.
+            if self.faults is not None:
+                self.faults.check("wal.compact")
             os.replace(tmp, self.path)
 
     def close(self) -> None:

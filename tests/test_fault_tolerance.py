@@ -24,6 +24,7 @@ from repro.serve.diversity import (
     QueryFrontend,
     StreamRuntime,
     WalError,
+    WriteAheadLog,
 )
 
 SEEDS = tuple(
@@ -446,3 +447,67 @@ def test_saturation_burst_bounded_by_deadline(rng, seed):
         assert time.perf_counter() - t1 < deadline_s + 2.0
     assert sum(outcomes.values()) == 48
     assert time.perf_counter() - t0 < 12 * (deadline_s + 2.0)
+
+
+# ----------------------------------------------------------------------
+# input validation: non-finite batches are rejected at the door
+# ----------------------------------------------------------------------
+
+def test_nonfinite_batch_rejected_before_wal(rng, tmp_path):
+    """NaN/Inf coordinates raise ``ValueError`` BEFORE the WAL append —
+    a poisoned log entry would replay poison on every restore — and the
+    rejection is counted under ``serve.ingest.rejected``."""
+    P, cats, caps, spec, k = _instance(rng, n=100)
+    reg = obs.MetricsRegistry()
+    rt = _make_runtime(
+        spec, k, caps, registry=reg, durability=str(tmp_path)
+    )
+    rt.ingest(P[:50], cats[:50])
+    bad_nan = P[50:].copy()
+    bad_nan[3, 1] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        rt.ingest(bad_nan, cats[50:])
+    bad_inf = P[50:].copy()
+    bad_inf[0, 0] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        rt.submit(bad_inf, cats[50:])
+    assert int(reg.counter(
+        "serve.ingest.rejected", reason="nonfinite"
+    ).value) == 2
+    # the stream is unharmed and keeps accepting good batches
+    rt.submit(P[50:], cats[50:])
+    rt.flush()
+    assert rt.n_offered == 100
+    ref_fp = _reference_fingerprint(
+        spec, k, caps, [(P[:50], cats[:50]), (P[50:], cats[50:])]
+    )
+    assert rt.latest().fingerprint == ref_fp
+    # the WAL never saw the poison: only the two good batches are on
+    # disk (inspect before close — the parting checkpoint compacts it),
+    # so a restore replays a clean stream
+    wal = WriteAheadLog(DurabilityConfig(dir=str(tmp_path)).wal_path)
+    assert [r.seq for r in wal.replay()] == [0, 1]
+    wal.close()
+    rt.close()
+    restored = StreamRuntime.restore(str(tmp_path))
+    assert restored.latest().fingerprint == ref_fp
+    restored.close()
+
+
+def test_nonfinite_rejected_on_nondurable_runtime(rng):
+    """The same validation guards the in-memory path (no WAL): the
+    sync and async ingest APIs both refuse, the counter ticks."""
+    P, cats, caps, spec, k = _instance(rng, n=100)
+    reg = obs.MetricsRegistry()
+    rt = _make_runtime(spec, k, caps, registry=reg)
+    bad = P[:50].copy()
+    bad[7, 0] = -np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        rt.ingest(bad, cats[:50])
+    with pytest.raises(ValueError, match="non-finite"):
+        rt.submit(bad, cats[:50])
+    assert int(reg.counter(
+        "serve.ingest.rejected", reason="nonfinite"
+    ).value) == 2
+    assert rt.n_offered == 0
+    rt.close()

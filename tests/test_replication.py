@@ -1,0 +1,560 @@
+"""Replicated serving suite: WAL shipping parity, fingerprint fencing,
+failover durability, health-driven promotion, and the integrity auditor.
+
+Chaos cases run over the seeded ``CHAOS_SEEDS`` matrix like the rest of
+the fault-tolerance suites: every fault schedule is a pure function of
+the seed, so the asserts are exact (bit-identical fingerprints, zero
+acked batches lost) and reproduce with the same env var.
+"""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from conftest import make_clustered_points
+from repro import obs
+from repro.core.matroid import MatroidSpec
+from repro.serve.diversity import (
+    AuditConfig,
+    DiversityQuery,
+    FaultPlan,
+    FaultPolicy,
+    FaultRule,
+    HealthConfig,
+    HealthMonitor,
+    IntegrityAuditor,
+    ReplicaSet,
+    StreamRuntime,
+)
+from repro.serve.diversity.coalesce import PendingCall
+
+SEEDS = tuple(
+    int(s) for s in os.environ.get("CHAOS_SEEDS", "101,202,303,404").split(",")
+)
+
+
+def _instance(rng, n=400, h=4, k=4):
+    P = make_clustered_points(rng, n=n)
+    cats = rng.integers(0, h, (n, 1)).astype(np.int32)
+    caps = np.full(h, 2, np.int32)
+    spec = MatroidSpec("partition", num_categories=h, gamma=1)
+    return P, cats, caps, spec, k
+
+
+def _batches(P, cats, size=50):
+    return [
+        (P[off:off + size], cats[off:off + size])
+        for off in range(0, P.shape[0], size)
+    ]
+
+
+def _make_set(spec, k, caps, tmp_path, **kw):
+    return ReplicaSet.create(
+        spec, k, dir=str(tmp_path / "replicas"), caps=caps,
+        tau=12, block_size=32, registry=obs.MetricsRegistry(), **kw,
+    )
+
+
+def _reference_fingerprint(spec, k, caps, batches):
+    ref = StreamRuntime(
+        spec, k, tau=12, caps=caps, block_size=32,
+        registry=obs.MetricsRegistry(),
+    )
+    for pts, cs in batches:
+        ref.ingest(pts, cs)
+    fp = ref.refresh(force=True).fingerprint
+    ref.close()
+    return fp
+
+
+def _wait(cond, timeout=30.0):
+    deadline = time.monotonic() + timeout
+    while not cond():
+        if time.monotonic() > deadline:
+            raise TimeoutError("condition not met in time")
+        time.sleep(0.01)
+
+
+# ----------------------------------------------------------------------
+# shipping parity
+# ----------------------------------------------------------------------
+
+def test_standby_replays_to_bit_identical_state(tmp_path):
+    """A standby fed the primary's WAL records is bit-identical at every
+    synced watermark — the §3 pure-fold argument, machine-checked."""
+    rng = np.random.default_rng(0)
+    P, cats, caps, spec, k = _instance(rng)
+    rs = _make_set(spec, k, caps, tmp_path)
+    try:
+        for pts, cs in _batches(P, cats):
+            rs.submit(pts, cs)
+        rs.sync(timeout=120)
+        prt = rs.primary.runtime
+        srt = rs.standbys[0].runtime
+        assert prt.n_offered == srt.n_offered == P.shape[0]
+        assert prt.fingerprint == srt.fingerprint
+        assert rs.verify_standbys() == {"standby-0": True}
+        # the standby's own WAL carries the primary's seq numbers
+        assert srt._applied_seq == prt._applied_seq == rs.acked_seq
+        # and it publishes its own query-able epochs
+        assert srt.latest() is not None
+        assert srt.latest().fingerprint == prt.latest().fingerprint
+    finally:
+        rs.close()
+
+
+def test_standby_serves_reads_and_tenant_fanout(tmp_path):
+    """Registered tenants exist on every replica, so a standby answers
+    the same query with the same selection the primary would."""
+    rng = np.random.default_rng(1)
+    P, cats, caps, spec, k = _instance(rng)
+    rs = _make_set(spec, k, caps, tmp_path)
+    try:
+        rs.register_tenant("uni", spec=MatroidSpec("uniform"))
+        for pts, cs in _batches(P, cats):
+            rs.submit(pts, cs)
+        rs.sync(timeout=120)
+        direct = rs.query_batch(
+            [DiversityQuery(k=k)], tenant="uni", allow_stale=False
+        )
+        stale = rs.standbys[0].frontend.query_batch(
+            [DiversityQuery(k=k)], tenant="uni"
+        )
+        assert np.array_equal(
+            np.sort(direct[0].indices), np.sort(stale[0].indices)
+        )
+        assert stale[0].epoch >= 0
+    finally:
+        rs.close()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_dropped_ship_heals_from_primary_wal(tmp_path, seed):
+    """``replication.ship`` drops are healed by the standby's gap fetch
+    against the primary's durable log — parity is restored without a
+    re-seed."""
+    rng = np.random.default_rng(seed)
+    P, cats, caps, spec, k = _instance(rng)
+    plan = FaultPlan(seed, [
+        FaultRule(site="replication.ship", kind="error", after=2,
+                  every=3, times=3),
+    ])
+    reg = obs.MetricsRegistry()
+    rs = ReplicaSet.create(
+        spec, k, dir=str(tmp_path / "r"), caps=caps,
+        tau=12, block_size=32, registry=reg,
+    )
+    rs.faults = plan  # ship-side only: the runtimes stay clean
+    try:
+        bs = _batches(P, cats)
+        for pts, cs in bs:
+            rs.submit(pts, cs)
+        # a clean trailing record guarantees the gap fetch fires even
+        # when the schedule dropped the last shipped batch
+        rs.faults = None
+        rs.submit(*bs[0])
+        rs.sync(timeout=120)
+        drops = int(rs._m_ship_errors.value)
+        assert drops >= 1
+        heals = int(reg.counter(
+            "serve.replication.gap_heals", replica="standby-0"
+        ).value)
+        assert heals >= drops
+        assert rs.verify_standbys() == {"standby-0": True}
+        assert not rs.standbys[0].fenced
+        assert int(rs._m_reseeds.value) == 0
+    finally:
+        rs.close()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_transient_apply_fault_gap_heals(tmp_path, seed):
+    """``replica.crash`` with ``kind="error"`` is a transient apply
+    failure: the record is recovered from the primary's WAL by the next
+    record's gap fetch, and the apply thread survives."""
+    rng = np.random.default_rng(seed)
+    P, cats, caps, spec, k = _instance(rng, n=200)
+    plan = FaultPlan(seed, [
+        FaultRule(site="replica.crash", kind="error", after=1, times=1),
+    ])
+    reg = obs.MetricsRegistry()
+    rs = ReplicaSet.create(
+        spec, k, dir=str(tmp_path / "r"), caps=caps,
+        tau=12, block_size=32, registry=reg, standby_faults=plan,
+    )
+    try:
+        for pts, cs in _batches(P, cats):
+            rs.submit(pts, cs)
+        rs.sync(timeout=120)
+        sb = rs.standbys[0]
+        assert not sb.dead
+        heals = int(reg.counter(
+            "serve.replication.gap_heals", replica="standby-0"
+        ).value)
+        assert heals >= 1
+        assert rs.verify_standbys() == {"standby-0": True}
+    finally:
+        rs.close()
+
+
+def test_apply_crash_kills_standby(tmp_path):
+    """``replica.crash`` with ``kind="crash"`` kills the apply thread:
+    the standby is marked dead, excluded from verification/sync, and
+    failover refuses to promote it."""
+    rng = np.random.default_rng(2)
+    P, cats, caps, spec, k = _instance(rng, n=200)
+    plan = FaultPlan(7, [
+        FaultRule(site="replica.crash", kind="crash", after=1, times=1),
+    ])
+    reg = obs.MetricsRegistry()
+    rs = ReplicaSet.create(
+        spec, k, dir=str(tmp_path / "r"), caps=caps,
+        tau=12, block_size=32, registry=reg, standby_faults=plan,
+    )
+    try:
+        for pts, cs in _batches(P, cats):
+            rs.submit(pts, cs)
+        rs.flush()
+        sb = rs.standbys[0]
+        _wait(lambda: sb.dead)
+        assert not sb.promotable
+        assert int(reg.counter(
+            "serve.replication.apply_crashes", replica="standby-0"
+        ).value) == 1
+        assert rs.verify_standbys() == {"standby-0": None}
+        rs.sync(timeout=30)  # dead standby is skipped, not waited on
+        with pytest.raises(RuntimeError, match="no promotable standby"):
+            rs.failover(reason="test")
+    finally:
+        rs.close()
+
+
+# ----------------------------------------------------------------------
+# divergence: fence + re-seed
+# ----------------------------------------------------------------------
+
+def test_divergent_standby_fences_and_reseeds(tmp_path):
+    """A standby that folded a batch the primary never shipped is caught
+    by the watermark exchange, fenced, then re-seeded from the primary's
+    checkpoint back to parity."""
+    rng = np.random.default_rng(3)
+    P, cats, caps, spec, k = _instance(rng)
+    rs = _make_set(spec, k, caps, tmp_path)
+    try:
+        bs = _batches(P, cats)
+        for pts, cs in bs[:4]:
+            rs.submit(pts, cs)
+        rs.sync(timeout=120)
+        sb = rs.standbys[0]
+        # corrupt the standby out-of-band: a batch the primary never saw
+        sb.runtime.ingest(
+            rng.normal(size=(8, P.shape[1])).astype(np.float32),
+            rng.integers(0, 4, (8, 1)).astype(np.int32),
+        )
+        for pts, cs in bs[4:]:
+            rs.submit(pts, cs)
+        rs.sync(timeout=120)
+        assert rs.verify_standbys() == {"standby-0": False}
+        assert int(rs._m_reseeds.value) == 1
+        assert not sb.fenced  # re-seeded and back in rotation
+        rs.sync(timeout=120)
+        assert rs.verify_standbys() == {"standby-0": True}
+        assert rs.primary.runtime.fingerprint == sb.runtime.fingerprint
+    finally:
+        rs.close()
+
+
+def test_fenced_standby_not_promotable(tmp_path):
+    rng = np.random.default_rng(4)
+    P, cats, caps, spec, k = _instance(rng, n=100)
+    rs = _make_set(spec, k, caps, tmp_path)
+    try:
+        for pts, cs in _batches(P, cats):
+            rs.submit(pts, cs)
+        rs.sync(timeout=120)
+        rs.standbys[0]._fence("test")
+        with pytest.raises(RuntimeError, match="no promotable standby"):
+            rs.failover(reason="test")
+    finally:
+        rs.close()
+
+
+# ----------------------------------------------------------------------
+# failover
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_primary_kill_mid_ingest_promotes_with_parity(tmp_path, seed):
+    """The acceptance scenario: the primary's worker is killed mid-
+    stream under load; the standby promotes automatically, the post-
+    failover fingerprint is bit-identical to a single-runtime replay of
+    the same batch sequence, and zero acked batches are lost."""
+    rng = np.random.default_rng(seed)
+    P, cats, caps, spec, k = _instance(rng, n=600)
+    batches = _batches(P, cats)
+    plan = FaultPlan(seed, [
+        FaultRule(site="worker.loop", kind="crash",
+                  after=2 + seed % 5, times=1),
+    ])
+    rs = ReplicaSet.create(
+        spec, k, dir=str(tmp_path / "r"), caps=caps,
+        tau=12, block_size=32, registry=obs.MetricsRegistry(),
+        faults=plan, fault_policy=FaultPolicy(max_worker_restarts=0),
+    )
+    try:
+        for pts, cs in batches:
+            rs.submit(pts, cs)  # fails over inline if the death surfaced
+        rs.flush()  # fails over here if the death surfaced late
+        rs.sync(timeout=120)
+        st = rs.stats()
+        assert st["failovers"] == 1
+        assert st["primary"] == "standby-0"
+        assert st["acked_batches"] == len(batches)
+        # zero acked batches lost: every acked seq is applied
+        prt = rs.primary.runtime
+        assert prt._applied_seq == rs.acked_seq
+        assert prt.n_offered == P.shape[0]
+        # bit-identical to one runtime ingesting the same sequence
+        assert prt.fingerprint == _reference_fingerprint(
+            spec, k, caps, batches
+        )
+        # and the promoted primary keeps serving + accepting writes
+        res = rs.query_batch([DiversityQuery(k=k)], allow_stale=False)
+        assert len(res) == 1 and res[0].indices.size > 0
+        rs.submit(*batches[0])
+        rs.flush()
+    finally:
+        rs.close()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_health_monitor_heartbeat_failures_trigger_failover(
+    tmp_path, seed
+):
+    """``health.heartbeat`` chaos: enough consecutive probe failures
+    promote the standby even though no submit ever observed an error."""
+    rng = np.random.default_rng(seed)
+    P, cats, caps, spec, k = _instance(rng, n=200)
+    plan = FaultPlan(seed, [
+        FaultRule(site="health.heartbeat", kind="error", times=None),
+    ])
+    rs = _make_set(spec, k, caps, tmp_path)
+    mon = HealthMonitor(
+        rs, HealthConfig(interval_s=0.01, failure_threshold=3)
+    )
+    try:
+        for pts, cs in _batches(P, cats):
+            rs.submit(pts, cs)
+        rs.sync(timeout=120)
+        assert mon.probe()["healthy"]
+        rs.faults = plan  # every heartbeat now fails
+        statuses = [mon.probe() for _ in range(3)]
+        assert not statuses[-1]["healthy"]
+        assert statuses[-1]["failed_over"] == "standby-0"
+        assert rs.primary.name == "standby-0"
+        assert int(rs._m_failovers.value) == 1
+        # the promoted primary probes healthy again
+        rs.faults = None
+        assert mon.probe()["healthy"]
+        assert rs.primary.runtime.fingerprint is not None
+    finally:
+        mon.close()
+        rs.close()
+
+
+def test_failover_redispatches_parked_coalesced_calls(tmp_path):
+    """In-window coalesced calls parked on the dying primary's frontend
+    are drained un-failed and answered by the adopting frontend."""
+    rng = np.random.default_rng(5)
+    P, cats, caps, spec, k = _instance(rng)
+    rs = _make_set(spec, k, caps, tmp_path)
+    try:
+        for pts, cs in _batches(P, cats):
+            rs.submit(pts, cs)
+        rs.sync(timeout=120)
+        fe = rs.primary.frontend
+        co = fe.coalescer
+        assert co is not None
+        # park calls directly in the window (the dispatcher thread only
+        # starts on a live submit, so this state is stable to inspect)
+        t0 = time.perf_counter()
+        parked = [
+            PendingCall(
+                fe.default_tenant, [DiversityQuery(k=k)], engine="auto",
+                min_epoch=None, deadline=None, enq_t=t0, dispatch_by=t0,
+            )
+            for _ in range(2)
+        ]
+        with co._cv:
+            co._q.extend(parked)
+        drained = fe.drain_pending()
+        assert all(p in drained for p in parked)
+        released = rs.standbys[0].frontend.adopt_pending(drained)
+        assert released == len(drained)
+        for p in parked:
+            assert p.done.is_set()
+            assert p.error is None
+            assert len(p.results) == 1
+            assert p.results[0].indices.size > 0
+    finally:
+        rs.close()
+
+
+def test_most_caught_up_standby_wins_promotion(tmp_path):
+    """With two standbys at different application watermarks, failover
+    picks the one with the higher applied seq and replays the old
+    primary's WAL tail on top."""
+    rng = np.random.default_rng(6)
+    P, cats, caps, spec, k = _instance(rng)
+    rs = _make_set(spec, k, caps, tmp_path, n_standbys=2)
+    try:
+        bs = _batches(P, cats)
+        for pts, cs in bs[:4]:
+            rs.submit(pts, cs)
+        rs.sync(timeout=120)
+        # freeze standby-1's apply thread at seq 3; keep streaming
+        sb1 = next(s for s in rs.standbys if s.name == "standby-1")
+        sb1.stop(drain=False)
+        behind = sb1.applied_upto
+        for pts, cs in bs[4:]:
+            rs.submit(pts, cs)
+        rs.flush()
+        sb0 = next(s for s in rs.standbys if s.name == "standby-0")
+        _wait(lambda: sb0.applied_upto >= rs.acked_seq)
+        assert sb1.applied_upto == behind < sb0.applied_upto
+        promoted = rs.failover(reason="test")
+        assert promoted == "standby-0"
+        assert rs.primary.runtime._applied_seq == rs.acked_seq
+        assert rs.last_failover["retired"] == "primary"
+    finally:
+        rs.close()
+
+
+# ----------------------------------------------------------------------
+# integrity auditor
+# ----------------------------------------------------------------------
+
+def test_audit_clean_stack_passes(tmp_path):
+    rng = np.random.default_rng(7)
+    P, cats, caps, spec, k = _instance(rng)
+    rs = _make_set(spec, k, caps, tmp_path)
+    try:
+        for pts, cs in _batches(P, cats):
+            rs.submit(pts, cs)
+        rs.sync(timeout=120)
+        # a query populates the pdist cache so the audit spot-checks it
+        rs.query_batch([DiversityQuery(k=k)], allow_stale=False)
+        aud = IntegrityAuditor(rs)
+        reports = aud.audit_once()
+        assert len(reports) == 2
+        for r in reports:
+            assert r.ok, r.violations
+            assert r.checks > 0
+        assert aud.total_violations == 0
+        assert not rs.standbys[0].quarantined
+    finally:
+        rs.close()
+
+
+def test_audit_catches_corrupt_pdist_cache(tmp_path):
+    rng = np.random.default_rng(8)
+    P, cats, caps, spec, k = _instance(rng, n=200)
+    rs = _make_set(spec, k, caps, tmp_path, n_standbys=0)
+    try:
+        for pts, cs in _batches(P, cats):
+            rs.submit(pts, cs)
+        rs.flush()
+        rs.query_batch([DiversityQuery(k=k)], allow_stale=False)
+        fe = rs.primary.frontend
+        with fe.cache._mu:
+            entry = next(iter(fe.cache._entries.values()))
+        # corrupt the cached matrix (the buffer itself is a read-only
+        # device view, so swap in a corrupted host copy)
+        entry.D = np.asarray(entry.D) + 10.0
+        aud = IntegrityAuditor(rs, config=AuditConfig(pdist_samples=64))
+        reports = aud.audit_once()
+        assert any(
+            v.startswith("pdist") for r in reports for v in r.violations
+        )
+    finally:
+        rs.close()
+
+
+def test_audit_catches_corrupt_state_and_quarantines(tmp_path):
+    """A standby whose delegate store is corrupted in device memory
+    fails the coverage (and fingerprint) checks and is quarantined —
+    excluded from reads and from promotion."""
+    rng = np.random.default_rng(9)
+    P, cats, caps, spec, k = _instance(rng)
+    rs = _make_set(spec, k, caps, tmp_path)
+    try:
+        for pts, cs in _batches(P, cats):
+            rs.submit(pts, cs)
+        rs.sync(timeout=120)
+        sb = rs.standbys[0]
+        rt = sb.runtime
+        with rt._cv:
+            st = rt._state
+            rt._state = st._replace(dp=st.dp + 1.0e6)
+        aud = IntegrityAuditor(rs)
+        reports = aud.audit_once()
+        bad = next(r for r in reports if r.replica == "standby-0")
+        assert not bad.ok
+        assert any(
+            v.startswith(("coverage", "fingerprint"))
+            for v in bad.violations
+        )
+        assert sb.quarantined
+        assert not sb.promotable
+        with pytest.raises(RuntimeError, match="no promotable standby"):
+            rs.failover(reason="test")
+        # the primary's report stays clean
+        assert next(r for r in reports if r.replica == "primary").ok
+    finally:
+        rs.close()
+
+
+def test_audit_single_runtime_target():
+    """The auditor also works against a bare runtime (no replica set)."""
+    rng = np.random.default_rng(10)
+    P, cats, caps, spec, k = _instance(rng, n=200)
+    rt = StreamRuntime(
+        spec, k, tau=12, caps=caps, block_size=32,
+        registry=obs.MetricsRegistry(),
+    )
+    try:
+        for pts, cs in _batches(P, cats):
+            rt.ingest(pts, cs)
+        rt.refresh(force=True)
+        aud = IntegrityAuditor(rt)
+        reports = aud.audit_once()
+        assert len(reports) == 1 and reports[0].ok
+        assert reports[0].replica == "runtime"
+    finally:
+        rt.close()
+
+
+# ----------------------------------------------------------------------
+# watermarked fingerprint history (the exchange primitive itself)
+# ----------------------------------------------------------------------
+
+def test_fingerprint_watermarks_recorded_per_ingest():
+    rng = np.random.default_rng(11)
+    P, cats, caps, spec, k = _instance(rng, n=200)
+    rt = StreamRuntime(
+        spec, k, tau=12, caps=caps, block_size=32,
+        registry=obs.MetricsRegistry(),
+    )
+    try:
+        offs = []
+        for pts, cs in _batches(P, cats):
+            rt.ingest(pts, cs)
+            offs.append(rt.n_offered)
+        assert rt.fingerprint_watermarks() == offs
+        for n in offs:
+            assert rt.fingerprint_at(n) is not None
+        assert rt.fingerprint_at(offs[-1]) == rt.fingerprint
+        assert rt.fingerprint_at(offs[-1] + 7) is None
+    finally:
+        rt.close()
