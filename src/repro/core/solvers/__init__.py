@@ -44,6 +44,11 @@ from .jit_sum import (
     solve_sum_batch_transversal,
 )
 from .local_search import greedy_init, local_search_sum
+from .stacked import (
+    counts_stack_eligible,
+    solve_stacked,
+    solve_sum_batch_stacked,
+)
 
 HOST_LOCAL_SEARCH = register_engine(HostLocalSearchEngine())
 HOST_EXHAUSTIVE = register_engine(HostExhaustiveEngine())
@@ -60,5 +65,6 @@ __all__ = [
     "JitGreedyBatchEngine", "JitSumBatchEngine",
     "bucket_pow2", "solve_sum_batch", "solve_sum_batch_transversal",
     "solve_greedy_batch", "solve_greedy_batch_transversal",
+    "counts_stack_eligible", "solve_stacked", "solve_sum_batch_stacked",
     "exhaustive_best", "greedy_init", "local_search_sum",
 ]

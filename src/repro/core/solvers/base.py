@@ -168,6 +168,21 @@ class SolverEngine:
     ) -> list[EngineSolution]:
         return [self.solve_one(ctx, s) for s in specs]
 
+    # -- cross-tenant stacking (see stacked.py) ------------------------
+    # A stack-capable engine answers several single-tenant spec groups
+    # ("lanes" of (ctx, specs), differing only in their pdist leaf and
+    # matroid view) in ONE device dispatch. Default: not capable.
+
+    def stack_eligible(self, ctx: SolveContext, spec: SolveSpec) -> bool:
+        return False
+
+    def solve_batch_stacked(
+        self, lanes: Sequence[tuple[SolveContext, Sequence[SolveSpec]]]
+    ) -> list[list[EngineSolution]]:
+        raise NotImplementedError(
+            f"engine {self.name!r} has no stacked solve path"
+        )
+
     def __repr__(self):
         return f"<SolverEngine {self.name!r}>"
 
@@ -306,6 +321,7 @@ def partition_by_engine(
     hints: Optional[Sequence[Optional[str]]] = None,
     cost_model=None,
     batch_size: Optional[int] = None,
+    stacked: bool = False,
 ) -> dict[str, list[int]]:
     """Split a batch into per-engine groups (engine name -> spec indices).
 
@@ -321,7 +337,8 @@ def partition_by_engine(
     B=1 and never cross over to the amortizing jit engines.
     ``batch_size`` overrides the B the model sees (the micro-batch
     coalescer partitions per caller for admission but routes with the
-    merged group's size). Decisions are
+    merged group's size); ``stacked=True`` marks the decision as priced
+    for a cross-tenant stacked launch in the audit ring. Decisions are
     recorded in the model's audit ring and counted under
     ``solve.dispatch.cost_routed``. ``cost_model=None`` (the default, and
     what the offline ``solve_dmmc``/``final_solve`` drivers use) keeps
@@ -348,6 +365,7 @@ def partition_by_engine(
         winner, ests = cost_model.choose(names, B=B, kmax=kmax, m=ctx.size)
         cost_model.record_decision(
             engine=winner, candidates=ests, B=B, kmax=kmax, m=ctx.size,
+            stacked=stacked,
         )
         reg.counter("solve.dispatch.cost_routed", engine=winner).inc(
             len(idxs)

@@ -162,6 +162,20 @@ class CostModel:
             return ema * (self._static(engine, Bb, kb, mb) / base)
         return self._static(engine, B, kmax, m)
 
+    def estimate_stacked(
+        self, engine: str, parts: Sequence[tuple[int, int]], m: int
+    ) -> float:
+        """Predicted wall seconds of ONE cross-tenant stacked
+        ``solve_batch_stacked`` call: ``parts`` is one ``(B, kmax)``
+        pair per stacked entry. Rows are vmapped independently and the
+        pdist matrix is the only per-entry leaf, so the device sees one
+        batch whose effective size is the SUM of rows across entries at
+        the max k — pricing it as a single-tenant B would undercount
+        the launch by the number of tenants stacked."""
+        B = sum(max(1, int(b)) for b, _k in parts)
+        kmax = max((max(1, int(k)) for _b, k in parts), default=1)
+        return self.estimate(engine, B=B, kmax=kmax, m=m)
+
     def calibrated(self, engine: str, B: int = 1, kmax: int = 1,
                    m: int = 1) -> bool:
         """True iff ``estimate`` for this request would be backed by at
@@ -207,8 +221,10 @@ class CostModel:
         return winner, ests
 
     def record_decision(self, *, engine: str, candidates: dict[str, float],
-                        B: int, kmax: int, m: int) -> None:
+                        B: int, kmax: int, m: int,
+                        stacked: bool = False) -> None:
         d = dict(engine=engine, B=int(B), kmax=int(kmax), m=int(m),
+                 stacked=bool(stacked),
                  estimates={k: float(v) for k, v in candidates.items()})
         with self._mu:
             self._decisions.append(d)

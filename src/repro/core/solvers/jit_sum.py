@@ -367,6 +367,17 @@ class JitSumBatchEngine(SolverEngine):
     def eligible(self, ctx: SolveContext, spec: SolveSpec) -> bool:
         return jit_cell_eligible(self, ctx, spec)
 
+    def stack_eligible(self, ctx: SolveContext, spec: SolveSpec) -> bool:
+        # local import: stacked.py reuses this module's row solver
+        from .stacked import counts_stack_eligible
+
+        return counts_stack_eligible(self, ctx, spec)
+
+    def solve_batch_stacked(self, lanes) -> "list[list[EngineSolution]]":
+        from .stacked import solve_stacked
+
+        return solve_stacked(lanes)
+
     def solve_batch(
         self, ctx: SolveContext, specs: Sequence[SolveSpec]
     ) -> list[EngineSolution]:

@@ -27,10 +27,13 @@ dispatch that used to live inside ``DiversityService``:
              fetched (and possibly built) exactly once per batch;
   coalesce   under real concurrency, ``query_batch`` calls from any
              threads/tenants merge through an adaptive micro-batch
-             window (``coalesce.Coalescer``) into shared vmapped solves,
-             bit-identical to per-call answers. A solo caller bypasses
-             the window entirely — single-threaded behavior (spans,
-             trace IDs, latency) is byte-for-byte the uncoalesced path.
+             window (``coalesce.Coalescer``: a tenant-sharded dispatcher
+             pool with a Little's-law window controller) into shared
+             vmapped solves — stacked ACROSS tenants into one device
+             dispatch when the engine supports it — bit-identical to
+             per-call answers. A solo caller bypasses the window
+             entirely — single-threaded behavior (spans, trace IDs,
+             latency) is byte-for-byte the uncoalesced path.
 
 Thread-safe: any number of threads may query while the runtime's worker
 ingests; the cache serializes entry builds internally.
@@ -522,6 +525,12 @@ class QueryFrontend:
                 )
             for name, idxs in groups.items():
                 eng = get_engine(name)
+                self._note_window_cost(
+                    self.cost_model.estimate(
+                        name, B=len(idxs),
+                        kmax=max(specs[i].k for i in idxs), m=ctx.size,
+                    )
+                )
                 t1 = time.perf_counter()
                 c0 = self._compiles.total()
                 with obs.span(
@@ -694,6 +703,12 @@ class QueryFrontend:
                 items = merged[(name, kb)]
                 eng = get_engine(name)
                 mspecs = [c.specs[i] for c, i in items]
+                self._note_window_cost(
+                    self.cost_model.estimate(
+                        name, B=len(items),
+                        kmax=max(s.k for s in mspecs), m=ctx.size,
+                    )
+                )
                 t1 = time.perf_counter()
                 c0 = self._compiles.total()
                 with obs.span(
@@ -742,6 +757,289 @@ class QueryFrontend:
                     reg.counter(
                         "serve.query.deadline_miss", tenant=t.name
                     ).inc()
+
+    def _note_window_cost(self, est_s: float) -> None:
+        """Feed one merged launch's cost-model estimate to the adaptive
+        window controller (the S in its Little's-law target)."""
+        co = self.coalescer
+        if co is not None:
+            co.window.observe_solve(est_s)
+
+    def _solve_coalesced_stacked(
+        self, subs: "list[list[PendingCall]]"
+    ) -> None:
+        """Execute one cross-tenant wave: several single-tenant coalesced
+        sub-groups (each a ``_solve_coalesced``-shaped call list)
+        agreeing on ``(engine, min_epoch)``, solved together.
+
+        Per-caller semantics are the single-tenant path's — engine
+        partition with hints, deadline admission, shed/degrade — applied
+        per tenant lane before any merging. The merge then goes one step
+        further than ``_solve_coalesced``: admitted specs landing in the
+        same ``(engine, k-bucket)`` across *different tenants* stack
+        into ONE device dispatch (``core/solvers/stacked.py``) when the
+        engine supports it, because entries for different tenants over
+        the same stream differ only in their pdist matrix. A 4-tenant
+        mixed window pays one launch instead of four. Lanes the engine
+        cannot stack (transversal/general matroids, mismatched coreset
+        size or dtype, engines without the path) fall back to per-lane
+        solves inside the same wave. A lane whose cache-entry build
+        fails takes down only its own callers.
+        """
+        engine = subs[0][0].engine
+        min_epoch = subs[0][0].min_epoch
+        reg = self.registry
+        all_calls = [c for sub in subs for c in sub]
+        n_total = sum(len(c.queries) for c in all_calls)
+        with obs.trace(), obs.span(
+            "coalesce_stacked_group", cat="query", calls=len(all_calls),
+            n=n_total, tenants=len(subs), engine=engine,
+        ):
+
+            def _shed_call(c, entry=None, cached=False, epoch=-1):
+                reg.counter(
+                    "serve.query.shed", tenant=c.tenant.name
+                ).inc(len(c.queries))
+                c.results = [
+                    self._shed_result(
+                        q, entry, cached, epoch, c.tenant.name
+                    )
+                    for q in c.queries
+                ]
+
+            # the wave's epoch wait is bounded by its most patient
+            # caller; any deadline-free caller restores the default wait
+            kw = {}
+            if all(c.deadline is not None for c in all_calls):
+                kw["timeout"] = max(
+                    0.0,
+                    max(c.deadline for c in all_calls)
+                    - time.perf_counter(),
+                )
+            with obs.span(
+                "acquire_epoch", cat="query", min_epoch=min_epoch
+            ):
+                try:
+                    snap = self.runtime.acquire(min_epoch, **kw)
+                except TimeoutError:
+                    for c in all_calls:
+                        _shed_call(c)
+                    return
+            if min_epoch is not None:
+                now = time.perf_counter()
+                for c in all_calls:
+                    self._m_epoch_wait_s.observe(now - c.enq_t)
+            # per-tenant lane prep: cache entry + per-caller plan
+            lanes: list = []  # (tenant, ctx, entry, calls)
+            merged: dict[tuple[str, int], list] = {}
+            for sub in subs:
+                t: Tenant = sub[0].tenant
+                try:
+                    with obs.span(
+                        "cache_entry", cat="query", tenant=t.name,
+                        epoch=snap.epoch,
+                    ):
+                        entry, cached = self._entry(t, snap)
+                    ctx = self._solve_context(t, snap, entry)
+                except BaseException as e:  # noqa: BLE001 — isolate the
+                    # failed lane; the rest of the wave proceeds
+                    for c in sub:
+                        c.error = e
+                    continue
+                lane_i = len(lanes)
+                lanes.append((t, ctx, entry, sub))
+                first = True
+                for c in sub:
+                    c.from_cache = cached or not first
+                    first = False
+                    reg.counter(
+                        "serve.query.cache_hits" if c.from_cache
+                        else "serve.query.cache_misses",
+                        tenant=t.name,
+                    ).inc()
+                    c.results = [None] * len(c.queries)
+                    c.specs = [
+                        self._solve_spec(entry, q) for q in c.queries
+                    ]
+                    groups = partition_by_engine(
+                        ctx,
+                        c.specs,
+                        engine=c.engine,
+                        hints=[q.engine_hint for q in c.queries],
+                        cost_model=self.cost_model,
+                        batch_size=n_total,
+                        stacked=True,
+                    )
+                    c.degraded = set()
+                    shed_ix: set = set()
+                    if c.deadline is not None:
+                        with obs.span("admit", cat="query"):
+                            groups, c.degraded, shed_ix = self._admit(
+                                ctx, c.specs, groups, t.name,
+                                c.deadline - time.perf_counter(),
+                            )
+                        if c.degraded:
+                            reg.counter(
+                                "serve.query.degraded", tenant=t.name
+                            ).inc(len(c.degraded))
+                        if shed_ix:
+                            reg.counter(
+                                "serve.query.shed", tenant=t.name
+                            ).inc(len(shed_ix))
+                    for i in shed_ix:
+                        c.results[i] = self._shed_result(
+                            c.queries[i], entry, c.from_cache,
+                            snap.epoch, t.name,
+                        )
+                    for name, idxs in groups.items():
+                        for i in idxs:
+                            kb = bucket_pow2(max(1, c.specs[i].k))
+                            merged.setdefault((name, kb), []).append(
+                                (lane_i, c, i)
+                            )
+
+            def _fan(lane_i, li, sols):
+                lt, _ctx, lentry, _sub = lanes[lane_i]
+                for (c, i), sol in zip(li, sols):
+                    loc = np.asarray(sol.local_indices, np.int64)
+                    c.results[i] = QueryResult(
+                        indices=lentry.src_idx[loc],
+                        local_indices=loc,
+                        diversity=sol.value,
+                        variant=c.queries[i].variant,
+                        engine=sol.engine,
+                        coreset_size=lentry.size,
+                        from_cache=c.from_cache,
+                        epoch=snap.epoch,
+                        tenant=lt.name,
+                        degraded=i in c.degraded,
+                    )
+
+            # merged launches: per (engine, k-bucket), stack the lanes
+            # the engine can take together; solve the rest per lane
+            for (name, kb) in sorted(merged):
+                items = merged[(name, kb)]
+                eng = get_engine(name)
+                per_lane: dict[int, list] = {}
+                for lane_i, c, i in items:
+                    per_lane.setdefault(lane_i, []).append((c, i))
+                stacks: dict[tuple, list[int]] = {}
+                solo: list[int] = []
+                for lane_i, li in per_lane.items():
+                    ctx = lanes[lane_i][1]
+                    if all(
+                        eng.stack_eligible(ctx, c.specs[i])
+                        for c, i in li
+                    ):
+                        sig = (ctx.size, str(ctx.D.dtype))
+                        stacks.setdefault(sig, []).append(lane_i)
+                    else:
+                        solo.append(lane_i)
+                # a lone stackable lane has nothing to amortize with
+                for sig in list(stacks):
+                    if len(stacks[sig]) < 2:
+                        solo.extend(stacks.pop(sig))
+                for sig, lis in stacks.items():
+                    lane_args = []
+                    parts = []
+                    for lane_i in lis:
+                        ctx = lanes[lane_i][1]
+                        li = per_lane[lane_i]
+                        lspecs = [c.specs[i] for c, i in li]
+                        lane_args.append((ctx, lspecs))
+                        parts.append(
+                            (len(lspecs), max(s.k for s in lspecs))
+                        )
+                    m = sig[0]
+                    rows = sum(b for b, _k in parts)
+                    self._note_window_cost(
+                        self.cost_model.estimate_stacked(name, parts, m)
+                    )
+                    t1 = time.perf_counter()
+                    c0 = self._compiles.total()
+                    with obs.span(
+                        "solve", cat="query", engine=name, n=rows,
+                        k_bucket=kb, stacked_tenants=len(lis),
+                        coalesced_calls=len({
+                            id(c)
+                            for lane_i in lis
+                            for c, _ in per_lane[lane_i]
+                        }),
+                    ):
+                        lane_sols = eng.solve_batch_stacked(lane_args)
+                    with obs.span(
+                        "device_sync", cat="query", engine=name
+                    ):
+                        for lane_i, sols in zip(lis, lane_sols):
+                            _fan(lane_i, per_lane[lane_i], sols)
+                    dt = time.perf_counter() - t1
+                    reg.counter("serve.coalesce.stacked_solves").inc()
+                    reg.counter(
+                        "serve.coalesce.stacked_rows"
+                    ).inc(rows)
+                    reg.histogram(
+                        "serve.coalesce.stacked_tenants"
+                    ).observe(len(lis))
+                    for lane_i in lis:
+                        reg.histogram(
+                            "serve.solve.latency_s",
+                            tenant=lanes[lane_i][0].name, engine=name,
+                        ).observe(dt)
+                    reg.histogram(
+                        "serve.solve.batch_size", engine=name
+                    ).observe(rows)
+                    if self._compiles.total() == c0:
+                        self.cost_model.observe(
+                            name, rows, max(k for _b, k in parts), m, dt
+                        )
+                for lane_i in solo:
+                    lt, ctx, _e, _sub = lanes[lane_i]
+                    li = per_lane[lane_i]
+                    lspecs = [c.specs[i] for c, i in li]
+                    self._note_window_cost(
+                        self.cost_model.estimate(
+                            name, B=len(li),
+                            kmax=max(s.k for s in lspecs), m=ctx.size,
+                        )
+                    )
+                    t1 = time.perf_counter()
+                    c0 = self._compiles.total()
+                    with obs.span(
+                        "solve", cat="query", engine=name, n=len(li),
+                        k_bucket=kb,
+                        coalesced_calls=len({id(c) for c, _ in li}),
+                    ):
+                        sols = eng.solve_batch(ctx, lspecs)
+                    with obs.span(
+                        "device_sync", cat="query", engine=name
+                    ):
+                        _fan(lane_i, li, sols)
+                    dt = time.perf_counter() - t1
+                    reg.histogram(
+                        "serve.solve.latency_s", tenant=lt.name,
+                        engine=name,
+                    ).observe(dt)
+                    reg.histogram(
+                        "serve.solve.batch_size", engine=name
+                    ).observe(len(li))
+                    if self._compiles.total() == c0:
+                        self.cost_model.observe(
+                            name, len(li), max(s.k for s in lspecs),
+                            ctx.size, dt,
+                        )
+            now = time.perf_counter()
+            for lt, _ctx, _e, sub in lanes:
+                for c in sub:
+                    reg.histogram(
+                        "serve.query.latency_s", tenant=lt.name
+                    ).observe(now - c.enq_t)
+                    reg.histogram(
+                        "serve.query.batch_size", tenant=lt.name
+                    ).observe(len(c.queries))
+                    if c.deadline is not None and now > c.deadline:
+                        reg.counter(
+                            "serve.query.deadline_miss", tenant=lt.name
+                        ).inc()
 
     # ------------------------------------------------------------------
     # freshness + observability
@@ -825,19 +1123,40 @@ class QueryFrontend:
         """Re-dispatch ``PendingCall``s drained from a failed peer
         frontend on THIS frontend: remap each call's tenant to the local
         registry (replica frontends register the same tenant names),
-        solve, and release the still-blocked caller. Returns the number
-        of calls released."""
+        solve, and release the still-blocked caller. Calls drained from
+        ALL of the peer's dispatcher shards arrive here; they regroup by
+        ``(engine, min_epoch)`` and a multi-tenant group re-dispatches
+        as one stacked wave, exactly as the pool would have run it.
+        Returns the number of calls released."""
         released = 0
+        waves: dict[tuple, dict[str, list]] = {}
         for c in calls:
             try:
                 c.tenant = self._resolve_tenant(c.tenant.name)
-                self._solve_coalesced([c])
             except BaseException as e:  # noqa: BLE001 — fan the failure
                 # back to the blocked caller; adoption must release all
                 c.error = e
-            finally:
                 c.done.set()
                 released += 1
+                continue
+            waves.setdefault(
+                (c.engine, c.min_epoch), {}
+            ).setdefault(c.tenant.name, []).append(c)
+        for by_tenant in waves.values():
+            subs = list(by_tenant.values())
+            grp = [c for sub in subs for c in sub]
+            try:
+                if len(subs) == 1:
+                    self._solve_coalesced(subs[0])
+                else:
+                    self._solve_coalesced_stacked(subs)
+            except BaseException as e:  # noqa: BLE001
+                for c in grp:
+                    c.error = e
+            finally:
+                for c in grp:
+                    c.done.set()
+                    released += 1
         return released
 
     def close(self) -> None:

@@ -17,6 +17,7 @@ Three contracts under test:
 """
 import threading
 import time
+import zlib
 
 import numpy as np
 import pytest
@@ -36,7 +37,7 @@ from repro.serve.diversity import (
     QueryFrontend,
     StreamRuntime,
 )
-from repro.serve.diversity.coalesce import Coalescer
+from repro.serve.diversity.coalesce import AdaptiveWindow, Coalescer
 
 
 # --------------------------------------------------------------------------
@@ -340,7 +341,9 @@ def test_deadline_bounds_window_wait():
                 self.dispatched.append(c)
 
     fe = _FakeFrontend()
-    co = Coalescer(fe, CoalesceConfig(window_s=10.0))
+    # adaptive=False: the fixed 10 s window is what the deadline cap
+    # must beat (the adaptive controller would collapse it on its own)
+    co = Coalescer(fe, CoalesceConfig(window_s=10.0, adaptive=False))
     try:
         t0 = time.perf_counter()
         dispatched_at = co.submit(
@@ -475,4 +478,380 @@ def test_frontend_close_idempotent_and_coalescer_refuses_after(rng):
             fe.default_tenant, [DiversityQuery(k=3)], engine="auto",
             min_epoch=None, deadline_s=None,
         )
+    rt.close()
+
+
+# --------------------------------------------------------------------------
+# PR 10: cross-tenant stacked solves through the frontend
+# --------------------------------------------------------------------------
+
+
+def test_cross_tenant_stacked_parity_through_frontend(rng):
+    """A mixed multi-tenant concurrent window executes as stacked
+    cross-tenant launches and every answer stays bit-identical to the
+    direct per-tenant path. dispatchers=1 keeps window assembly
+    deterministic; the stacking happens in the shared dispatch stage."""
+    reg = obs.MetricsRegistry()
+    rt, fe = _frontend(
+        rng, reg,
+        coalesce=CoalesceConfig(window_s=0.02, dispatchers=1),
+    )
+    fe.register_tenant("uniform", spec=MatroidSpec("uniform"))
+    fe.register_tenant("uniform2", spec=MatroidSpec("uniform"))
+    fe.register_tenant(
+        "part2", spec=MatroidSpec("partition", num_categories=4, gamma=1)
+    )
+    calls = [
+        ("default", [DiversityQuery(k=2), DiversityQuery(k=5)]),
+        ("uniform", [DiversityQuery(k=8)]),
+        ("uniform2", [DiversityQuery(k=3), DiversityQuery(k=4)]),
+        ("part2", [DiversityQuery(k=4, caps=(1, 1, 1, 1))]),
+        ("default", [DiversityQuery(k=3,
+                                    allowed_cats=frozenset({0, 1, 2}))]),
+        ("uniform", [DiversityQuery(k=4, variant="star",
+                                    engine_hint="jit_greedy")]),
+    ]
+    baseline = [
+        fe._query_batch_direct(list(qs), tenant=fe.tenants.get(t))
+        for t, qs in calls
+    ]
+    for _round in range(3):
+        results = [None] * len(calls)
+        barrier = threading.Barrier(len(calls))
+
+        def worker(i, t, qs):
+            barrier.wait()
+            results[i] = fe.query_batch(qs, tenant=t)
+
+        threads = [
+            threading.Thread(target=worker, args=(i, t, qs))
+            for i, (t, qs) in enumerate(calls)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        for got, want in zip(results, baseline):
+            for a, b in zip(got, want):
+                _assert_same(a, b)
+    # the barrier makes a >= 2-tenant window overwhelmingly likely in at
+    # least one of the rounds: the stacked path must actually have run
+    assert reg.counter("serve.coalesce.stacked_solves").value >= 1
+    assert reg.counter("serve.coalesce.stacked_rows").value >= 2
+    st = fe.stats()["coalesce"]
+    assert st["stacked_solves"] >= 1
+    fe.close()
+    rt.close()
+
+
+# --------------------------------------------------------------------------
+# PR 10: adaptive window controller
+# --------------------------------------------------------------------------
+
+
+def _ticking_window(cfg):
+    clk = [0.0]
+    return clk, AdaptiveWindow(cfg, clock=lambda: clk[0])
+
+
+def test_adaptive_window_widens_under_queue_growth():
+    cfg = CoalesceConfig(
+        window_s=3e-4, window_min_s=1e-4, window_max_s=2e-3
+    )
+    clk, w = _ticking_window(cfg)
+    # steady 10 kHz arrivals: well past the collapse threshold
+    for _ in range(50):
+        clk[0] += 1e-4
+        w.observe_arrival()
+    w.observe_solve(5e-4)
+    base = w.current(backlog=0)
+    assert base == pytest.approx(5e-4, rel=1e-6)  # Little target = S
+    wide = w.current(backlog=16)
+    assert wide > base  # standing queue -> widen toward max batch
+    assert wide <= cfg.window_max_s
+    assert w.current(backlog=10_000) == cfg.window_max_s  # clamped
+    # the controller is observable: trace carries (t, window) history
+    snap = w.snapshot()
+    assert snap["rate_hz"] == pytest.approx(1e4, rel=0.2)
+    assert len(snap["trace"]) >= 3
+    assert snap["trace"][-1][1] == cfg.window_max_s
+
+
+def test_adaptive_window_collapses_when_idle():
+    cfg = CoalesceConfig(window_min_s=1e-4, window_max_s=2e-3)
+    clk, w = _ticking_window(cfg)
+    # cold start: no arrival history means no companion expected
+    assert w.current(backlog=0) == 0.0
+    for _ in range(50):
+        clk[0] += 1e-4
+        w.observe_arrival()
+    assert w.current(backlog=0) > 0.0  # busy: window open
+    clk[0] += 10.0  # silence decays the rate even though the EMA is hot
+    assert w.current(backlog=0) == 0.0  # idle again: solo-bypass regime
+    # sparse arrivals (1 Hz) can't fill a 2 ms window either
+    clk2, w2 = _ticking_window(cfg)
+    for _ in range(10):
+        clk2[0] += 1.0
+        w2.observe_arrival()
+    assert w2.current(backlog=0) == 0.0
+
+
+def test_adaptive_window_fixed_mode_and_bad_observations():
+    cfg = CoalesceConfig(window_s=7e-4, adaptive=False)
+    clk, w = _ticking_window(cfg)
+    assert w.current(backlog=0) == 7e-4
+    assert w.current(backlog=1_000) == 7e-4  # fixed means fixed
+    w.observe_solve(float("nan"))  # refused quietly
+    w.observe_solve(-1.0)
+    assert w.snapshot()["solve_est_s"] is None
+
+
+# --------------------------------------------------------------------------
+# PR 10: dispatcher pool — FIFO, close/drain, failover re-dispatch
+# --------------------------------------------------------------------------
+
+
+class _T:
+    def __init__(self, name):
+        self.name = name
+
+
+class _PoolFakeFrontend:
+    """Records execution order; optionally blocks every solve until
+    ``release`` is set (to pin calls in shard queues)."""
+
+    def __init__(self, block=False):
+        self.registry = obs.MetricsRegistry()
+        self.order = []
+        self.mu = threading.Lock()
+        self.release = threading.Event()
+        if not block:
+            self.release.set()
+
+    def active_calls(self):
+        return 1_000_000  # never triggers the early close
+
+    def _record(self, calls):
+        self.release.wait(timeout=10.0)
+        with self.mu:
+            for c in calls:
+                self.order.extend(c.queries)
+                c.results = list(c.queries)
+
+    def _solve_coalesced(self, calls):
+        self._record(calls)
+
+    def _solve_coalesced_stacked(self, subs):
+        for sub in subs:
+            self._record(sub)
+
+
+def _shard_distinct_names(n_shards, n_names):
+    """Tenant names guaranteed to cover ``n_shards`` distinct shards."""
+    names, seen = [], set()
+    i = 0
+    while len(names) < n_names:
+        name = f"tn{i}"
+        i += 1
+        shard = zlib.crc32(name.encode()) % n_shards
+        if len(seen) < n_shards and shard in seen and \
+                n_names - len(names) <= n_shards - len(seen):
+            continue  # still need unseen shards: skip duplicates
+        seen.add(shard)
+        names.append(name)
+    assert len(seen) == n_shards
+    return names
+
+
+def test_per_tenant_fifo_under_dispatcher_pool():
+    """Per-tenant submission order survives the pool: same tenant lands
+    on the same shard, windows assemble FIFO, and the shared stage's
+    busy set forbids two executors on one tenant at a time."""
+    fe = _PoolFakeFrontend()
+    co = Coalescer(
+        fe, CoalesceConfig(window_s=0.01, adaptive=False, dispatchers=3)
+    )
+    try:
+        names = _shard_distinct_names(3, 3)
+        tenants = {n: _T(n) for n in names}
+        threads = []
+        for i in range(6):
+            for n in names:
+                th = threading.Thread(
+                    target=co.submit,
+                    args=(tenants[n], [f"{n}:{i}"]),
+                    kwargs=dict(
+                        engine="auto", min_epoch=None, deadline_s=None
+                    ),
+                )
+                th.start()
+                threads.append(th)
+                time.sleep(0.005)  # deterministic per-tenant enq order
+        for th in threads:
+            th.join(timeout=20.0)
+            assert not th.is_alive()
+        for n in names:
+            got = [q for q in fe.order if q.startswith(f"{n}:")]
+            assert got == [f"{n}:{i}" for i in range(6)], (n, got)
+    finally:
+        co.close()
+
+
+def test_close_fails_queued_calls_on_every_shard_loudly():
+    """close() with dispatchers mid-solve: in-flight groups complete,
+    queued calls on every shard fail with the close error, none hang,
+    and a second close is a no-op."""
+    fe = _PoolFakeFrontend(block=True)
+    co = Coalescer(
+        fe, CoalesceConfig(window_s=0.02, adaptive=False, dispatchers=3)
+    )
+    names = _shard_distinct_names(3, 6)
+    tenants = [_T(n) for n in names]
+    outcomes = {}
+    omu = threading.Lock()
+
+    def call(t, tag):
+        try:
+            r = co.submit(
+                t, [tag], engine="auto", min_epoch=None, deadline_s=None
+            )
+            with omu:
+                outcomes[tag] = ("ok", r)
+        except RuntimeError as e:
+            with omu:
+                outcomes[tag] = ("err", str(e))
+
+    first = [
+        threading.Thread(target=call, args=(t, f"first-{t.name}"))
+        for t in tenants
+    ]
+    for th in first:
+        th.start()
+    time.sleep(0.4)  # windows closed; every dispatcher blocked in-solve
+    second = [
+        threading.Thread(target=call, args=(t, f"second-{t.name}"))
+        for t in tenants
+    ]
+    for th in second:
+        th.start()
+    time.sleep(0.3)  # second wave parked behind the blocked dispatchers
+    closer = threading.Thread(target=co.close)
+    closer.start()
+    time.sleep(0.05)
+    fe.release.set()  # let the in-flight groups finish
+    closer.join(timeout=15.0)
+    assert not closer.is_alive()
+    for th in first + second:
+        th.join(timeout=15.0)
+        assert not th.is_alive()  # none hang
+    assert len(outcomes) == 12
+    for t in tenants:
+        assert outcomes[f"first-{t.name}"][0] == "ok"
+        kind, detail = outcomes[f"second-{t.name}"]
+        assert kind == "err" and "closed" in detail, (t.name, detail)
+    co.close()  # idempotent with everything already torn down
+
+
+def test_failover_redispatch_drains_all_dispatchers(rng):
+    """ReplicaSet-style failover across a pool: drain() hands back the
+    queued calls of EVERY shard un-failed, and adopt_pending on the
+    promoted frontend re-dispatches the multi-tenant set as one stacked
+    wave, releasing all blocked callers with real answers."""
+    reg = obs.MetricsRegistry()
+    rt, fe = _frontend(rng, reg)
+    names = _shard_distinct_names(2, 2)
+    for n in names:
+        fe.register_tenant(n, spec=MatroidSpec("uniform"))
+    fake = _PoolFakeFrontend(block=True)
+    co = Coalescer(
+        fake, CoalesceConfig(window_s=0.02, adaptive=False, dispatchers=2)
+    )
+    results = {}
+    rmu = threading.Lock()
+
+    def call(name, tag, k):
+        # forced jit_sum: the cost model would route a tiny 2-row wave
+        # to a host engine, which has no stacked path — the point here
+        # is pinning the adoption wave through the stacked launch
+        r = co.submit(
+            fe.tenants.get(name), [DiversityQuery(k=k)],
+            engine="jit_sum", min_epoch=None, deadline_s=None,
+        )
+        with rmu:
+            results[tag] = r
+    first = [
+        threading.Thread(target=call, args=(n, f"first-{n}", 3))
+        for n in names
+    ]
+    for th in first:
+        th.start()
+    time.sleep(0.4)  # both dispatchers blocked mid-solve
+    second = [
+        threading.Thread(target=call, args=(n, f"second-{n}", 4))
+        for n in names
+    ]
+    for th in second:
+        th.start()
+    time.sleep(0.3)  # one queued call per shard
+    drained = co.drain()
+    assert sorted(c.tenant.name for c in drained) == sorted(names)
+    assert co.backlog == 0
+    stacked_before = reg.counter("serve.coalesce.stacked_solves").value
+    released = fe.adopt_pending(drained)
+    assert released == len(drained)
+    # same-epoch uniform lanes: adoption ran them as one stacked wave
+    assert reg.counter(
+        "serve.coalesce.stacked_solves"
+    ).value > stacked_before
+    fake.release.set()
+    for th in first + second:
+        th.join(timeout=15.0)
+        assert not th.is_alive()
+    for n in names:
+        got = results[f"second-{n}"]
+        want = fe._query_batch_direct(
+            [DiversityQuery(k=4)], tenant=fe.tenants.get(n),
+            engine="jit_sum",
+        )
+        _assert_same(got[0], want[0])
+    co.close()
+    fe.close()
+    rt.close()
+
+
+def test_pool_stats_aggregate_across_dispatchers(rng):
+    reg = obs.MetricsRegistry()
+    rt, fe = _frontend(
+        rng, reg,
+        coalesce=CoalesceConfig(window_s=0.02, dispatchers=2),
+    )
+    fe.register_tenant("uniform", spec=MatroidSpec("uniform"))
+    barrier = threading.Barrier(4)
+
+    def worker(t):
+        barrier.wait()
+        fe.query_batch([DiversityQuery(k=3)], tenant=t)
+
+    threads = [
+        threading.Thread(
+            target=worker, args=("default" if i % 2 else "uniform",)
+        )
+        for i in range(4)
+    ]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    st = fe.stats()["coalesce"]
+    assert st["dispatchers"] == 2
+    assert set(st["per_dispatcher"]) == {"d0", "d1"}
+    # the pool-wide aggregates are the sum of the per-dispatcher series
+    assert st["groups"] == sum(
+        d["groups"] for d in st["per_dispatcher"].values()
+    )
+    assert st["queue_depth"] == 0
+    assert reg.gauge("serve.coalesce.backlog").value == 0
+    assert st["adaptive"] is True
+    assert "trace" in st["window"]
+    fe.close()
     rt.close()

@@ -376,8 +376,9 @@ def test_failover_redispatches_parked_coalesced_calls(tmp_path):
         fe = rs.primary.frontend
         co = fe.coalescer
         assert co is not None
-        # park calls directly in the window (the dispatcher thread only
-        # starts on a live submit, so this state is stable to inspect)
+        # park calls directly in the window (shard threads only start on a
+        # live submit, so this state is stable to inspect); drain() must
+        # sweep every shard, so spread the calls across the pool
         t0 = time.perf_counter()
         parked = [
             PendingCall(
@@ -386,8 +387,10 @@ def test_failover_redispatches_parked_coalesced_calls(tmp_path):
             )
             for _ in range(2)
         ]
-        with co._cv:
-            co._q.extend(parked)
+        for i, p in enumerate(parked):
+            sh = co._shards[i % len(co._shards)]
+            with sh.cv:
+                sh.q.append(p)
         drained = fe.drain_pending()
         assert all(p in drained for p in parked)
         released = rs.standbys[0].frontend.adopt_pending(drained)
